@@ -1,0 +1,48 @@
+"""Beyond-paper table: non-stationary resources (the paper's stated future
+work).  Per-client mean resources follow a geometric random walk (drift
+sigma per round) on top of the paper's within-round fluctuation; policies
+that forget (discounted / sliding-window UCB) should beat the stationary
+Element-wise MAB-CS, which in turn beats last-observation FedCS."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.bandit import make_policy
+from repro.core.nonstationary import DriftingResources
+from repro.fl.server import FederatedServer, FLConfig
+from repro.sim.network import make_network_env
+from repro.sim.resources import PAPER_MODEL_BITS
+
+POLICIES = ["fedcs", "elementwise_ucb", "sliding_ucb", "discounted_ucb"]
+
+
+def run_one(policy: str, drift: float, seed: int, n_rounds: int = 400,
+            eta: float = 1.95) -> float:
+    env = make_network_env(100, np.random.default_rng(seed))
+    res = DriftingResources(env, eta=eta, model_bits=PAPER_MODEL_BITS,
+                            drift=drift, seed=seed)
+    pol = make_policy(policy, 100, 5)
+    srv = FederatedServer(FLConfig(seed=seed), pol, res)
+    srv.run(n_rounds)
+    return srv.elapsed
+
+
+def main(fast: bool = False) -> list[str]:
+    out = ["name,us_per_call,derived"]
+    n_rounds = 150 if fast else 400
+    seeds = range(2 if fast else 4)
+    for drift in ([0.02, 0.05] if fast else [0.0, 0.02, 0.05]):
+        totals = {p: np.mean([run_one(p, drift, s, n_rounds) for s in seeds])
+                  for p in POLICIES}
+        fed = totals["fedcs"]
+        for p in POLICIES[1:]:
+            out.append(f"drift/sigma={drift}/{p},,"
+                       f"elapsed={totals[p]:.0f}s "
+                       f"vs_fedcs={100*(fed-totals[p])/fed:+.2f}%")
+    return out
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -1,0 +1,74 @@
+"""Paper Figs. 1 & 2: elapsed-time difference / reduction ratio vs FedCS
+as a function of the resource-fluctuation parameter eta.
+
+For each eta and each policy, runs the full FL protocol (time-only mode —
+the paper's time metrics are independent of the learning dynamics) over
+N_ROUNDS rounds and N_SEEDS seeds, and reports:
+    T_FedCS - T_policy          (Fig. 1, Eq. 12; positive = policy faster)
+    (T_FedCS - T_policy)/T_FedCS (Fig. 2 reduction ratio)
+plus the no-fluctuation setting (the dashed lines in Fig. 2).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.bandit import make_policy
+from repro.fl.server import FederatedServer, FLConfig
+from repro.sim.network import make_network_env
+from repro.sim.resources import PAPER_MODEL_BITS, ResourceModel
+
+POLICIES = ["fedcs", "extended_fedcs", "naive_ucb", "elementwise_ucb"]
+ETAS = [1.0, 1.5, 1.9, 1.95, 1.99]
+N_ROUNDS = 500
+N_SEEDS = 5
+
+
+def run_one(policy: str, eta: float | None, seed: int,
+            n_rounds: int = N_ROUNDS, n_clients: int = 100,
+            s_round: int = 5) -> float:
+    env = make_network_env(n_clients, np.random.default_rng(seed))
+    res = ResourceModel(env, eta=(eta if eta is not None else 0.0),
+                        model_bits=PAPER_MODEL_BITS,
+                        fluctuate=eta is not None)
+    pol = make_policy(policy, n_clients, s_round)
+    srv = FederatedServer(FLConfig(n_clients=n_clients, s_round=s_round,
+                                   seed=seed), pol, res)
+    srv.run(n_rounds)
+    return srv.elapsed
+
+
+def sweep(n_rounds: int = N_ROUNDS, n_seeds: int = N_SEEDS,
+          etas=tuple(ETAS)) -> list[dict]:
+    rows = []
+    for eta in list(etas) + [None]:          # None = no fluctuation (dashed)
+        totals = {p: np.mean([run_one(p, eta, s, n_rounds)
+                              for s in range(n_seeds)]) for p in POLICIES}
+        fed = totals["fedcs"]
+        for p in POLICIES:
+            rows.append({
+                "eta": eta if eta is not None else "none",
+                "policy": p,
+                "elapsed_s": totals[p],
+                "diff_vs_fedcs_s": fed - totals[p],
+                "reduction_ratio": (fed - totals[p]) / fed,
+            })
+    return rows
+
+
+def main(fast: bool = False) -> list[str]:
+    rows = sweep(n_rounds=150 if fast else N_ROUNDS,
+                 n_seeds=3 if fast else N_SEEDS,
+                 etas=(1.0, 1.9, 1.99) if fast else tuple(ETAS))
+    out = ["name,us_per_call,derived"]
+    for r in rows:
+        out.append(
+            f"fig1_2/eta={r['eta']}/{r['policy']},,"
+            f"elapsed={r['elapsed_s']:.0f}s diff={r['diff_vs_fedcs_s']:+.0f}s "
+            f"ratio={r['reduction_ratio']:+.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

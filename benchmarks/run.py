@@ -1,0 +1,73 @@
+"""Benchmark orchestrator: one section per paper table/figure + system
+benches.  Prints ``name,us_per_call,derived`` CSV lines.
+
+  fig1_2  — elapsed-time diff / reduction ratio vs FedCS over eta (Figs 1-2)
+  fig3    — accuracy vs elapsed time (Fig 3)
+  fig4    — UCB-score convergence (Fig 4)
+  kernels — Pallas kernel micro-benches (interpret mode vs jnp reference)
+  roofline— per (arch x shape) roofline terms from the dry-run artifacts
+  scale   — selection-at-scale: vectorized UCB scoring for 1e6 arms
+
+``python -m benchmarks.run --fast`` runs reduced sizes (CI); default runs
+the full paper-scale settings.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def _section(name: str, fn, fast: bool) -> list[str]:
+    t0 = time.time()
+    try:
+        lines = fn(fast=fast)
+        lines.append(f"{name}/_wall,,{time.time()-t0:.1f}s")
+        return lines
+    except Exception as e:
+        traceback.print_exc()
+        return [f"{name}/_error,,{type(e).__name__}: {e}"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced sizes for CI")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated section filter")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_accuracy, bench_convergence, bench_drift,
+                            bench_kernels, bench_roofline, bench_scale,
+                            bench_selection)
+    sections = {
+        "fig1_2": bench_selection.main,
+        "fig3": bench_accuracy.main,
+        "fig4": bench_convergence.main,
+        "drift": bench_drift.main,
+        "kernels": bench_kernels.main,
+        "roofline": bench_roofline.main,
+        "scale": bench_scale.main,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        sections = {k: v for k, v in sections.items() if k in keep}
+
+    all_lines: list[str] = []
+    for name, fn in sections.items():
+        print(f"# --- {name} ---", file=sys.stderr)
+        all_lines += _section(name, fn, args.fast)
+
+    seen_header = False
+    for line in all_lines:
+        if line.startswith("name,us_per_call"):
+            if seen_header:
+                continue
+            seen_header = True
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Reproduce the shape of paper Figs. 1-2: the MAB selectors lose slightly
+when resources are stable and win increasingly as fluctuation grows.
+
+  PYTHONPATH=src python examples/eta_sweep.py
+"""
+
+import numpy as np
+
+from benchmarks.bench_selection import POLICIES, run_one
+
+
+def main() -> None:
+    print(f"{'eta':>6} | " + " | ".join(f"{p:>16}" for p in POLICIES[1:]))
+    for eta in [None, 1.0, 1.5, 1.9, 1.99]:
+        totals = {p: np.mean([run_one(p, eta, s, n_rounds=200)
+                              for s in range(3)]) for p in POLICIES}
+        fed = totals["fedcs"]
+        cells = [f"{100*(fed-totals[p])/fed:+15.2f}%" for p in POLICIES[1:]]
+        label = "stable" if eta is None else f"{eta:.2f}"
+        print(f"{label:>6} | " + " | ".join(cells))
+    print("\n(positive = faster than FedCS; rows match paper Fig. 2)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro — MAB-based client selection for federated learning (Yoshida et
+al., 2020) as a production-grade multi-pod JAX framework.
+
+See README.md for the map; DESIGN.md for the architecture; EXPERIMENTS.md
+for the reproduction + roofline + perf results.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,150 @@
+"""Checkpoint/restart (fault tolerance deliverable).
+
+Atomic on-disk checkpoints of the full training state: model params,
+optimizer state, *bandit state* (the MAB scheduler must survive restarts —
+losing it would reset exploration), RNG state and the data cursor.
+
+Format: one .npz of flattened leaves + a JSON manifest (treedef, step,
+metadata).  Writes go to a temp dir then os.replace (atomic on POSIX), so a
+crash mid-save never corrupts the latest checkpoint.  Retention:
+``keep_last`` newest + every ``keep_every``-th for history.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+
+_WIDE_VIEW = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+              "float8_e5m2": np.uint8}
+
+
+def _to_numpy(leaf) -> tuple[np.ndarray, str]:
+    """np.savez cannot store ml_dtypes (bf16/f8); store a uint view + tag."""
+    arr = np.asarray(leaf)
+    name = str(arr.dtype)
+    if name in _WIDE_VIEW:
+        return arr.view(_WIDE_VIEW[name]), name
+    return arr, name
+
+
+def _from_numpy(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _WIDE_VIEW:
+        import ml_dtypes
+        return arr.view(np.dtype(getattr(ml_dtypes, dtype_name)))
+    return arr
+
+
+def _flatten(tree: Any) -> tuple[list[np.ndarray], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return [np.asarray(l) for l in leaves], treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, keep_last: int = 3,
+                 keep_every: int = 0):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep_last = keep_last
+        self.keep_every = keep_every
+
+    # ------------------------------------------------------------------
+    def _path(self, step: int) -> Path:
+        return self.dir / f"ckpt_{step:08d}"
+
+    def save(self, step: int, state: dict[str, Any],
+             metadata: dict | None = None) -> Path:
+        """state: dict of pytrees (params, opt_state, bandit, ...)."""
+        tmp = self.dir / f".tmp_ckpt_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest: dict[str, Any] = {"step": step, "keys": {},
+                                    "metadata": metadata or {}}
+        for key, tree in state.items():
+            leaves, treedef = _flatten(tree)
+            stored, dtypes = [], []
+            for l in leaves:
+                arr, name = _to_numpy(l)
+                stored.append(arr)
+                dtypes.append(name)
+            np.savez(tmp / f"{key}.npz",
+                     **{f"leaf_{i}": l for i, l in enumerate(stored)})
+            manifest["keys"][key] = {
+                "n_leaves": len(leaves),
+                "dtypes": dtypes,
+                "treedef": str(treedef),
+            }
+        # stash treedefs via pickle-free round trip: rebuild from structure
+        import pickle
+        with open(tmp / "treedefs.pkl", "wb") as f:
+            pickle.dump({k: jax.tree.structure(v) for k, v in state.items()},
+                        f)
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        final = self._path(step)
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._gc()
+        return final
+
+    def restore(self, step: int | None = None) -> tuple[int, dict[str, Any]]:
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = self._path(step)
+        manifest = json.loads((path / "manifest.json").read_text())
+        import pickle
+        with open(path / "treedefs.pkl", "rb") as f:
+            treedefs = pickle.load(f)
+        state = {}
+        for key, info in manifest["keys"].items():
+            with np.load(path / f"{key}.npz") as z:
+                leaves = [_from_numpy(z[f"leaf_{i}"], info["dtypes"][i])
+                          for i in range(info["n_leaves"])]
+            state[key] = jax.tree.unflatten(treedefs[key], leaves)
+        return manifest["step"], state
+
+    # ------------------------------------------------------------------
+    def steps(self) -> list[int]:
+        return sorted(int(p.name.split("_")[1]) for p in self.dir.glob(
+            "ckpt_*") if p.is_dir())
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        if len(steps) <= self.keep_last:
+            return
+        drop = steps[:-self.keep_last]
+        for s in drop:
+            if self.keep_every and s % self.keep_every == 0:
+                continue
+            shutil.rmtree(self._path(s), ignore_errors=True)
+
+
+def bandit_state_tree(stats) -> dict:
+    """core.bandit.ClientStats -> checkpointable pytree."""
+    return {
+        "n_sel": stats.n_sel, "sum_ud": stats.sum_ud, "sum_ul": stats.sum_ul,
+        "sum_tinc": stats.sum_tinc, "last_ud": stats.last_ud,
+        "last_ul": stats.last_ul, "hist_ud": stats.hist_ud,
+        "hist_ul": stats.hist_ul, "hist_n": stats.hist_n,
+        "total_sel": np.asarray(stats.total_sel),
+    }
+
+
+def restore_bandit_state(stats, tree: dict) -> None:
+    for k in ("n_sel", "sum_ud", "sum_ul", "sum_tinc", "last_ud", "last_ul",
+              "hist_ud", "hist_ul", "hist_n"):
+        getattr(stats, k)[...] = tree[k]
+    stats.total_sel = int(tree["total_sel"])

@@ -1,0 +1,193 @@
+"""PartitionSpec rules for every model family.
+
+Rules are matched against flattened param paths and applied *from the right*
+(trailing dims), so stacked leading layer/group dims are automatically
+unsharded.  ``fsdp=True`` additionally shards one non-TP weight dim over the
+data axis (ZeRO-3 style); the pod axis stays pure-DP/cohort.
+
+Every proposed axis is divisibility-guarded against the actual dim size —
+e.g. seamless-m4t's vocab 256206 is not divisible by 16, so its embedding
+stays replicated rather than padding the published config.
+
+TP choices (Megatron-style):
+  * column-parallel: wq/wk/wv, mlp w_gate/w_up   -> last dim 'model'
+  * row-parallel:    wo, mlp w_down              -> 2nd-last dim 'model'
+  * experts:         leading E dim 'model' (expert parallelism)
+  * embeddings/unembed: vocab dim 'model'
+  * norms/scalars: replicated
+  * xlstm mLSTM: value/output-channel sharding (only 4 heads < 16, so the
+    dh axis is the TP axis, not the head axis)
+  * dense KV caches: batch over 'data', *sequence* over 'model'
+    (flash-decoding-style split-KV; softmax over the sharded S lowers to
+    all-reduce of max/sum)
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+from repro.models.layers import LMConfig
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _guarded(spec: tuple, shape: tuple, mesh: Mesh) -> P:
+    """Drop any axis that does not evenly divide its dim."""
+    out = []
+    for dim, axis in zip(shape, spec):
+        if axis is not None and dim % _axis_size(mesh, axis) == 0 and dim > 1:
+            out.append(axis)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _from_right(right: tuple, ndim: int) -> tuple:
+    right = tuple(right)
+    if ndim < len(right):
+        right = right[-ndim:]
+    return (None,) * (ndim - len(right)) + right
+
+
+# rules: (regex on path, spec-from-right). First match wins.
+def _param_rules(fsdp: bool) -> list[tuple[str, tuple | None]]:
+    d = "data" if fsdp else None
+    return [
+        # --- MoE experts: [.., E, D, F] / [.., E, F, D]
+        (r"moe/shared/w_(gate|up)$", (d, "model")),
+        (r"moe/shared/w_down$", ("model", d)),
+        (r"moe/.*w_(gate|up)$", ("model", d, None)),
+        (r"moe/.*w_down$", ("model", None, d)),
+        (r"moe/router$", (None, None)),
+        # --- xlstm (before generic attn/mlp rules)
+        (r"mlstm/.*w_if$", (None, None)),
+        (r"mlstm/.*w_[qk]$", (d, None)),
+        (r"mlstm/.*w_v$", (d, "model")),
+        (r"slstm", None),              # replicated (tiny, sequential cell)
+        # --- attention
+        (r"(attn|self_attn|cross_attn)/wq$", (d, "model")),
+        (r"wkv$", (d, "model")),
+        (r"(attn|self_attn|cross_attn)/w[kv]$", (d, "model")),
+        (r"(attn|self_attn|cross_attn)/wo$", ("model", d)),
+        (r"[qk]_norm$", (None,)),
+        # --- gated MLPs (dense mlp, mlstm up/gate, griffin w_gate)
+        (r"w_(gate|up)$", (d, "model")),
+        (r"w_down$", ("model", d)),
+        # --- embeddings
+        (r"embed/tok$", ("model", None)),
+        (r"unembed$", (None, "model")),
+        (r"patch_proj$", (None, "model")),
+        # --- griffin recurrent block
+        (r"w_x$", (d, "model")),
+        (r"w_[ri]$", (None, "model")),
+        (r"lam$", ("model",)),
+        (r"w_out$", ("model", d)),
+        (r"conv$", (None, "model")),
+        (r"w_in$", (d, None)),
+        # --- norms and anything else
+        (r"(norm|bias|scale)", None),
+    ]
+
+
+def spec_for_leaf(path_s: str, shape: tuple, rules, mesh: Mesh) -> P:
+    for pat, right in rules:
+        if re.search(pat, path_s):
+            if right is None:
+                return P()
+            return _guarded(_from_right(right, len(shape)), shape, mesh)
+    return P()          # default: replicated (safe)
+
+
+def param_specs(param_shapes: Any, cfg: LMConfig, mesh: Mesh,
+                fsdp: bool = False) -> Any:
+    rules = _param_rules(fsdp)
+
+    def leaf(path, x):
+        return spec_for_leaf(_path_str(path), tuple(x.shape), rules, mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf, param_shapes)
+
+
+def cache_specs(cache_shapes: Any, cfg: LMConfig, mesh: Mesh) -> Any:
+    """Decode caches / recurrent states (see module docstring)."""
+    ba = batch_axes(mesh)
+
+    def leaf(path, x):
+        s = _path_str(path)
+        nd = len(x.shape)
+        shape = tuple(x.shape)
+        if re.search(r"(^|/)(k|v)$", s) and nd == 5:      # [L,B,S,KV,dh]
+            return _guarded((None, ba, "model", None, None), shape, mesh)
+        if re.search(r"(^|/)(k|v)$", s) and nd == 4:      # [B,Wnd,KV,dh] ring
+            return _guarded((ba, "model", None, None), shape, mesh)
+        if s.endswith("enc_out"):                          # [B,S,D]
+            return _guarded((ba, None, None), shape, mesh)
+        if "mlstm" in s and nd == 6:                       # C [G,7,B,H,dh,dh]
+            return _guarded((None, None, ba, None, None, "model"), shape, mesh)
+        if "mlstm" in s and nd == 5:                       # n / conv_buf
+            return _guarded((None, None, ba, None, "model"), shape, mesh)
+        # generic recurrent state: shard last dim on model when divisible
+        spec = [None] * nd
+        if nd >= 2 and shape[-1] >= 16:
+            spec[-1] = "model"
+        return _guarded(tuple(spec), shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_shapes)
+
+
+def batch_specs(input_shapes: dict, mesh: Mesh) -> dict:
+    ba = batch_axes(mesh)
+
+    def leaf(path, x):
+        nd = len(x.shape)
+        return _guarded((ba,) + (None,) * (nd - 1), tuple(x.shape), mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf, input_shapes)
+
+
+def opt_specs(opt_shapes: Any, pspecs: Any) -> Any:
+    """Optimizer state: moments inherit the param specs; scalars replicate.
+
+    ``opt_shapes`` is the eval_shape of Optimizer.init; its {'m','v','mu'}
+    subtrees are param-shaped."""
+    def build(subtree):
+        return jax.tree.map(lambda s: s, pspecs)
+
+    out = {}
+    for k, v in opt_shapes.items():
+        if k in ("m", "v", "mu"):
+            out[k] = jax.tree.map(lambda s: s, pspecs)
+        else:
+            out[k] = jax.tree.map(lambda _: P(), v)
+    return out
+
+
+def to_named(tree_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,43 @@
+"""Aggregation step: weighted FedAvg (McMahan et al., paper ref [2]).
+
+global' = sum_k (D_k / sum D) * params_k over the surviving clients.
+
+The hot path for large models is the weighted accumulation over flattened
+parameter vectors; when ``use_kernel`` is on, it is served by the Pallas
+``fedavg`` kernel (kernels/fedavg.py), otherwise by pure jnp.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.trees import tree_weighted_sum
+
+
+def fedavg(client_params: list[Any], weights: list[float],
+           use_kernel: bool = False) -> Any:
+    """Weighted average of client parameter pytrees."""
+    w = np.asarray(weights, dtype=np.float64)
+    w = (w / w.sum()).astype(np.float32)
+    if not use_kernel:
+        return tree_weighted_sum(client_params, w)
+    from repro.kernels.ops import fedavg_combine  # lazy: kernels are optional
+    flats = [jax.flatten_util.ravel_pytree(p)[0] for p in client_params]
+    unravel = jax.flatten_util.ravel_pytree(client_params[0])[1]
+    stacked = jnp.stack(flats)            # [n_clients, n_params]
+    return unravel(fedavg_combine(stacked, jnp.asarray(w)))
+
+
+def fedavg_delta(global_params: Any, client_params: list[Any],
+                 weights: list[float], server_lr: float = 1.0) -> Any:
+    """Server-side update form: global + lr * sum w_k (client_k - global).
+    Equivalent to fedavg at lr=1; lets the server damp noisy cohorts."""
+    w = np.asarray(weights, dtype=np.float64)
+    w = (w / w.sum()).astype(np.float32)
+    deltas = [jax.tree.map(jnp.subtract, cp, global_params) for cp in client_params]
+    avg_delta = tree_weighted_sum(deltas, w)
+    return jax.tree.map(lambda g, d: g + server_lr * d, global_params, avg_delta)

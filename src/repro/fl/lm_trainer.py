@@ -1,0 +1,80 @@
+"""FL fine-tuning of the assigned LM architectures (reduced configs on CPU).
+
+Ties the paper's technique to the model zoo: each client holds a shard of a
+synthetic token stream; local updates are causal-LM steps; aggregation is
+FedAvg.  The full-size configs run the same code path on the pod runtime
+(distributed/fl_parallel.py); this host-level trainer exists so
+``launch.train --arch smollm-135m`` is runnable end-to-end on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import make_token_stream
+from repro.fl.aggregation import fedavg
+from repro.fl.server import LocalTrainer
+from repro.models.registry import build
+
+
+class LmFlTrainer(LocalTrainer):
+    def __init__(self, arch: str, n_clients: int, n_samples: np.ndarray,
+                 seed: int = 0, seq_len: int = 64, batch_size: int = 4,
+                 steps_per_round: int = 4, lr: float = 0.5):
+        self.api = build(arch, reduced=True)
+        cfg = self.api.cfg
+        rng = np.random.default_rng(seed)
+        stream = make_token_stream(200_000, cfg.vocab, seed=seed)
+        # each client owns a contiguous shard (size ~ n_samples scaled)
+        bounds = np.linspace(0, len(stream) - seq_len - 1, n_clients + 1,
+                             dtype=int)
+        self.shards = [(bounds[i], bounds[i + 1]) for i in range(n_clients)]
+        self.stream = stream
+        self.seq_len = seq_len
+        self.batch_size = batch_size
+        self.steps = steps_per_round
+        self.lr = lr
+        self.rng = rng
+        params = self.api.init(jax.random.PRNGKey(seed))
+
+        loss_fn = self.api.loss_fn
+
+        @jax.jit
+        def sgd_step(p, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(p, batch)
+            p = jax.tree.map(lambda w, g: w - lr * g, p, grads)
+            return p, loss
+
+        self._sgd_step = sgd_step
+        super().__init__(params, self._client_update_impl,
+                         self._aggregate_impl)
+        self.last_losses: list[float] = []
+
+    def _batch(self, lo: int, hi: int):
+        starts = self.rng.integers(lo, max(hi - self.seq_len - 1, lo + 1),
+                                   size=self.batch_size)
+        toks = np.stack([self.stream[s:s + self.seq_len] for s in starts])
+        return {"tokens": jnp.asarray(toks, jnp.int32)}
+
+    def _client_update_impl(self, params, k: int, rnd: int):
+        lo, hi = self.shards[k]
+        p = params
+        losses = []
+        for _ in range(self.steps):
+            p, loss = self._sgd_step(p, self._batch(lo, hi))
+            losses.append(float(loss))
+        self.last_losses = losses
+        return p, float(hi - lo)
+
+    def _aggregate_impl(self, global_params, results):
+        return fedavg([p for p, _ in results], [w for _, w in results])
+
+    def accuracy(self) -> float:
+        """Proxy metric: exp(-loss) on a held-out batch (perplexity-ish)."""
+        batch = self._batch(0, len(self.stream) - self.seq_len - 1)
+        loss = float(self.api.loss_fn(self.params, batch))
+        return float(np.exp(-loss))

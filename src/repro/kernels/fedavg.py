@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: weighted FedAvg combine.
+
+Aggregation is the server-side bandwidth hot-spot: C client models x N
+parameters -> one weighted sum.  For Kimi-K2 scale (1T params) this runs
+per-shard; the kernel streams each [C, BLOCK] tile through VMEM once and
+writes one [BLOCK] output tile (HBM traffic = (C+1)/C of the input bytes,
+the roofline minimum).
+
+weights are loaded whole (C <= a few hundred) into VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 8192        # output lanes per grid step
+
+
+def _fedavg_kernel(x_ref, w_ref, out_ref):
+    x = x_ref[...]                      # [C, BLOCK]
+    w = w_ref[...]                      # [C]
+    acc = jnp.einsum("cb,c->b", x.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fedavg_combine(stacked: jnp.ndarray, weights: jnp.ndarray,
+                   interpret: bool = True) -> jnp.ndarray:
+    """stacked: [C, N] flattened client params (N padded to BLOCK);
+    weights: [C] (should sum to 1). Returns [N]."""
+    c, n = stacked.shape
+    assert n % BLOCK == 0, f"pad N={n} to a multiple of {BLOCK}"
+    grid = (n // BLOCK,)
+    return pl.pallas_call(
+        _fedavg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((c, BLOCK), lambda i: (0, i)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), stacked.dtype),
+        interpret=interpret,
+    )(stacked, weights)

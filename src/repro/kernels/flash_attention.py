@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: causal GQA flash attention (forward).
+
+Grid (B, KV_heads, G, nq, nk) with the kv dimension innermost/sequential;
+online-softmax running stats (m, l) and the output accumulator live in VMEM
+scratch across the nk steps (FlashAttention-2 dataflow adapted to the TPU
+memory hierarchy: HBM -> VMEM block tiles -> MXU matmuls, fp32 accumulation
+in scratch).
+
+Block sizes default to (q=512, kv=512) x d_head — MXU-aligned (multiples of
+128 on the matmul dims) and VMEM-resident: q/k/v tiles + acc at d_head=128
+occupy ~1 MB of the ~16 MB budget.
+
+Causality is handled at block granularity: fully-masked blocks are skipped
+via @pl.when (no FLOPs), diagonal blocks apply the elementwise mask.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref,
+                      m_ref, l_ref, acc_ref,
+                      *, scale: float, block_q: int, block_kv: int,
+                      causal: bool, n_kv_blocks: int):
+    qi = pl.program_id(3)
+    ki = pl.program_id(4)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if causal:
+        # block fully below the diagonal -> nothing to do
+        run = qi * block_q + block_q - 1 >= ki * block_kv
+    else:
+        run = jnp.bool_(True)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0, 0].astype(jnp.float32)      # [bq, dh]
+        k = k_ref[0, 0].astype(jnp.float32)         # [bkv, dh]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_pos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 0)
+            k_pos = ki * block_kv + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_kv",
+                                             "interpret"))
+def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True, block_q: int = 512,
+                        block_kv: int = 512,
+                        interpret: bool = True) -> jnp.ndarray:
+    """q: [B, Sq, KV, G, dh]; k, v: [B, Skv, KV, dh] -> [B, Sq, KV, G, dh].
+
+    Same layout as models.layers.flash_attention (the jnp reference).
+    """
+    B, Sq, KV, G, dh = q.shape
+    Skv = k.shape[1]
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    assert Sq % block_q == 0 and Skv % block_kv == 0
+    nq, nk = Sq // block_q, Skv // block_kv
+    scale = dh ** -0.5
+
+    qt = q.transpose(0, 2, 3, 1, 4)            # [B, KV, G, Sq, dh]
+    kt = k.transpose(0, 2, 1, 3)               # [B, KV, Skv, dh]
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _flash_fwd_kernel, scale=scale, block_q=block_q, block_kv=block_kv,
+        causal=causal, n_kv_blocks=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV, G, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, block_q, dh),
+                         lambda b, h, g, i, j: (b, h, g, i, 0)),
+            pl.BlockSpec((1, 1, block_kv, dh),
+                         lambda b, h, g, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, dh),
+                         lambda b, h, g, i, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, block_q, dh),
+                               lambda b, h, g, i, j: (b, h, g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, Sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 3, 1, 2, 4)        # [B, Sq, KV, G, dh]

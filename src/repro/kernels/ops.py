@@ -1,0 +1,92 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On CPU (this container) kernels run in interpret mode — the kernel body
+executes op-by-op in Python, validating correctness against ref.py; on a
+real TPU backend set ``interpret=False`` (the default flips automatically).
+Padding to the kernels' block multiples is handled here so callers can pass
+arbitrary sizes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fedavg as _fedavg
+from repro.kernels import flash_attention as _flash
+from repro.kernels import rg_lru as _rg
+from repro.kernels import ucb_score as _ucb
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult, axis):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+def ucb_scores(sums, n_sel, total, alpha: float = 1000.0,
+               interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    s, k = _pad_to(sums, _ucb.BLOCK, 0)
+    n, _ = _pad_to(n_sel, _ucb.BLOCK, 0)
+    out = _ucb.ucb_scores(s, n, jnp.asarray(total), alpha=alpha,
+                          interpret=interpret)
+    return out[:k]
+
+
+def fedavg_combine(stacked, weights, interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    x, n = _pad_to(stacked, _fedavg.BLOCK, 1)
+    out = _fedavg.fedavg_combine(x, weights, interpret=interpret)
+    return out[:n]
+
+
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 512,
+                    block_kv: int = 512, interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _flash.flash_attention_fwd(q, k, v, causal=causal,
+                                      block_q=block_q, block_kv=block_kv,
+                                      interpret=interpret)
+
+
+def rg_lru_scan(a, b, interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _rg.rg_lru_scan(a, b, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# trainable kernel attention: Pallas forward + recompute-based backward
+# (FlashAttention-style: the bwd recomputes block attention from q,k,v via
+# the jnp blockwise reference instead of saving the score matrices)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention_trainable(q, k, v, causal: bool = True,
+                              interpret: bool | None = None):
+    return flash_attention(q, k, v, causal=causal, interpret=interpret)
+
+
+def _fat_fwd(q, k, v, causal, interpret):
+    out = flash_attention(q, k, v, causal=causal, interpret=interpret)
+    return out, (q, k, v)
+
+
+def _fat_bwd(causal, interpret, res, g):
+    from repro.models.layers import flash_attention as jnp_flash
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: jnp_flash(q_, k_, v_, causal=causal),
+                     q, k, v)
+    return vjp(g)
+
+
+flash_attention_trainable.defvjp(_fat_fwd, _fat_bwd)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BIG = 1e12
+
+
+def ucb_scores_ref(sums, n_sel, total, alpha: float = 1000.0):
+    nf = jnp.maximum(n_sel.astype(jnp.float32), 1.0)
+    mean = sums.astype(jnp.float32) / nf
+    bonus = jnp.sqrt(jnp.log(jnp.maximum(total.astype(jnp.float32), 2.0))
+                     / (2.0 * nf))
+    score = -(mean / alpha) + bonus
+    return jnp.where(n_sel == 0, jnp.float32(BIG), score)
+
+
+def fedavg_ref(stacked, weights):
+    return jnp.einsum("cn,c->n", stacked.astype(jnp.float32),
+                      weights.astype(jnp.float32)).astype(stacked.dtype)
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """q: [B,Sq,KV,G,dh]; k,v: [B,Skv,KV,dh] — naive full-softmax attention."""
+    B, Sq, KV, G, dh = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("bskgd,btkd->bkgst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * dh ** -0.5
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Skv)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def rg_lru_ref(a, b):
+    """y[t] = a[t] * y[t-1] + b[t], y[-1]=0. a,b: [B,T,W]."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    a32 = a.astype(jnp.float32).transpose(1, 0, 2)
+    b32 = b.astype(jnp.float32).transpose(1, 0, 2)
+    _, ys = jax.lax.scan(step, jnp.zeros_like(a32[0]), (a32, b32))
+    return ys.transpose(1, 0, 2).astype(a.dtype)

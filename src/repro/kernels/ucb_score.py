@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: fused UCB score over K arms (clients).
+
+At datacenter scale the MAB selector scores millions of arms per round
+(cross-device FL).  The score (paper Eq. 5/6 component form)
+
+    score_k = -(sum_k / n_k) / alpha + sqrt(log(total) / (2 * n_k))
+    score_k = BIG                      where n_k == 0   (explore-first)
+
+is elementwise over [K] state arrays — a memory-bound fusion the TPU should
+do in one HBM pass.  Tiled in (8, 128)-aligned 1-D blocks resident in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 1e12
+BLOCK = 4096        # lanes per grid step; multiple of 8*128
+
+
+def _ucb_kernel(sum_ref, n_ref, total_ref, out_ref, *, alpha: float):
+    s = sum_ref[...]
+    n = n_ref[...]
+    total = total_ref[0]
+    nf = n.astype(jnp.float32)
+    safe_n = jnp.maximum(nf, 1.0)
+    mean = s / safe_n
+    bonus = jnp.sqrt(jnp.log(jnp.maximum(total.astype(jnp.float32), 2.0))
+                     / (2.0 * safe_n))
+    score = -(mean / alpha) + bonus
+    out_ref[...] = jnp.where(n == 0, jnp.float32(BIG), score)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "interpret"))
+def ucb_scores(sums: jnp.ndarray, n_sel: jnp.ndarray, total: jnp.ndarray,
+               alpha: float = 1000.0, interpret: bool = True) -> jnp.ndarray:
+    """sums, n_sel: [K] (K padded to BLOCK); total: scalar int."""
+    k = sums.shape[0]
+    assert k % BLOCK == 0, f"pad K={k} to a multiple of {BLOCK}"
+    grid = (k // BLOCK,)
+    return pl.pallas_call(
+        functools.partial(_ucb_kernel, alpha=alpha),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.float32),
+        interpret=interpret,
+    )(sums.astype(jnp.float32), n_sel.astype(jnp.int32),
+      total.reshape(1).astype(jnp.int32))

@@ -1,0 +1,426 @@
+"""Loop-aware HLO cost analysis.
+
+XLA's built-in ``compiled.cost_analysis()`` counts a ``while`` body ONCE,
+but production JAX models are scan-over-layers (+ inner flash-attention
+scans), so FLOPs/bytes/collectives would be undercounted by 1-2 orders of
+magnitude.  This module parses the compiled (SPMD-partitioned, per-device)
+HLO text, discovers each while-loop's trip count from its condition
+computation, and accumulates:
+
+  * dot_flops        — 2 * prod(result_dims) * prod(contracting_dims)
+  * traffic_bytes    — sum over non-trivial ops of (operand + output bytes),
+                       XLA's own bytes-accessed convention, loop-corrected
+  * collectives      — per-kind {count, bytes} (result-shape bytes;
+                       reduce-scatter uses operand bytes = ring buffer size)
+
+Validated against analytical 6*N*D in tests/test_hlo_analysis.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "s4": 1, "u4": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_TRIVIAL = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+            "after-all", "partition-id", "replica-id", "iota"}
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\](?:\{[^}]*\})?")
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    result_sig: str
+    operands: list[str]
+    attrs: str
+    args: str = ""
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: dict[str, Op]
+    order: list[str]
+
+
+def _arrays_in(sig: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _ARRAY_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _sig_bytes(sig: str) -> int:
+    total = 0
+    for dt, dims in _arrays_in(sig):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"        # result name
+    # type sig: tuple '(...)' (no nested parens inside; may contain
+    # /*index=N*/ comments) or array 'f32[...]{...}'
+    r"((?:\([^()]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?)|(?:\w+\[\]))\s+"
+    r"([\w\-]+)\("                                  # opcode
+)
+
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s+->\s+.*\{\s*$")
+
+
+def parse_module(text: str) -> tuple[dict[str, Computation], str]:
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for line in text.splitlines():
+        m = _COMP_RE.match(line)
+        if m:
+            cur = Computation(m.group(2), {}, [])
+            comps[cur.name] = cur
+            if m.group(1):
+                entry = cur.name
+            continue
+        if line.startswith("}") and cur is not None:
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mo = _OP_RE.match(line)
+        if not mo:
+            continue
+        name, sig, opcode = mo.groups()
+        # operand names: %refs inside the top-level parens after opcode
+        rest = line[mo.end():]
+        depth = 1
+        args = ""
+        for ch in rest:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            args += ch
+        attrs = rest[len(args) + 1:]
+        operands = re.findall(r"%([\w\.\-]+)", args)
+        cur.ops[name] = Op(name, opcode, sig, operands, attrs, args)
+        cur.order.append(name)
+    assert entry is not None, "no ENTRY computation found"
+    return comps, entry
+
+
+def _tuple_elem_sig(sig: str, idx: int) -> str:
+    """Extract element idx from a tuple signature '(a, b, c)'."""
+    inner = sig.strip()
+    if inner.startswith("("):
+        inner = inner[1:-1]
+        parts = []
+        depth = 0
+        cur = ""
+        for ch in inner:
+            if ch in "([{":
+                depth += 1
+            elif ch in ")]}":
+                depth -= 1
+            if ch == "," and depth == 0:
+                parts.append(cur)
+                cur = ""
+            else:
+                cur += ch
+        parts.append(cur)
+        return parts[idx].strip()
+    return sig
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    res = _arrays_in(op.result_sig)
+    if not res:
+        return 0.0
+    _, rdims = res[0]
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+    if not m:
+        return 0.0
+    cdims = [int(x) for x in m.group(1).split(",") if x]
+    lhs = comp.ops.get(op.operands[0])
+    if lhs is None:
+        return 0.0
+    lsig = lhs.result_sig
+    gte = re.search(r"index=(\d+)", lhs.attrs)
+    if lhs.opcode == "get-tuple-element" and gte:
+        src = comp.ops.get(lhs.operands[0])
+        if src is not None:
+            lsig = _tuple_elem_sig(src.result_sig, int(gte.group(1)))
+    la = _arrays_in(lsig)
+    if not la:
+        return 0.0
+    _, ldims = la[0]
+    k = 1
+    for c in cdims:
+        if c < len(ldims):
+            k *= ldims[c]
+    n = 1
+    for d in rdims:
+        n *= d
+    return 2.0 * n * k
+
+
+def analyze(text: str, collect_top: int = 0) -> dict[str, Any]:
+    comps, entry = parse_module(text)
+
+    # pre-extract trip-count candidates per computation from raw constants
+    const_re = re.compile(r"=\s*s32\[\]\s+constant\((\d+)\)")
+    comp_consts: dict[str, list[int]] = {c: [] for c in comps}
+    cur = None
+    for line in text.splitlines():
+        m = _COMP_RE.match(line)
+        if m:
+            cur = m.group(2)
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur:
+            mc = const_re.search(line)
+            if mc:
+                comp_consts[cur].append(int(mc.group(1)))
+
+    memo: dict[str, dict] = {}
+
+    def walk(comp_name: str) -> dict:
+        if comp_name in memo:
+            return memo[comp_name]
+        comp = comps[comp_name]
+        acc = {"dot_flops": 0.0, "traffic_bytes": 0.0, "traffic_major": 0.0,
+               "collectives": {k: {"count": 0, "bytes": 0.0}
+                               for k in COLLECTIVES}}
+        memo[comp_name] = acc        # cycles impossible in HLO, safe
+        for name in comp.order:
+            op = comp.ops[name]
+            oc = op.opcode
+            if oc == "while":
+                body = re.search(r"body=%?([\w\.\-]+)", op.attrs)
+                cond = re.search(r"condition=%?([\w\.\-]+)", op.attrs)
+                # authoritative: XLA records the static trip count on the op
+                bc = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', op.attrs)
+                if bc:
+                    trips = int(bc.group(1))
+                elif cond and comp_consts.get(cond.group(1)):
+                    trips = max(comp_consts[cond.group(1)])
+                else:
+                    trips = 1
+                if body:
+                    sub = walk(body.group(1))
+                    acc["dot_flops"] += trips * sub["dot_flops"]
+                    acc["traffic_bytes"] += trips * sub["traffic_bytes"]
+                    acc["traffic_major"] += trips * sub["traffic_major"]
+                    for k in COLLECTIVES:
+                        acc["collectives"][k]["count"] += trips * sub["collectives"][k]["count"]
+                        acc["collectives"][k]["bytes"] += trips * sub["collectives"][k]["bytes"]
+                continue
+            if oc in ("call",):
+                tgt = re.search(r"to_apply=%?([\w\.\-]+)", op.attrs)
+                if tgt and tgt.group(1) in comps:
+                    sub = walk(tgt.group(1))
+                    for k in ("dot_flops", "traffic_bytes", "traffic_major"):
+                        acc[k] += sub[k]
+                    for k in COLLECTIVES:
+                        acc["collectives"][k]["count"] += sub["collectives"][k]["count"]
+                        acc["collectives"][k]["bytes"] += sub["collectives"][k]["bytes"]
+                continue
+            if oc in ("fusion",):
+                tgt = re.search(r"calls=%?([\w\.\-]+)", op.attrs)
+                if tgt and tgt.group(1) in comps:
+                    sub = walk(tgt.group(1))
+                    acc["dot_flops"] += sub["dot_flops"]     # dots rarely fused, but safe
+                # traffic: operands + output of the fusion op itself
+                t = _op_traffic(op, comp)
+                acc["traffic_bytes"] += t
+                acc["traffic_major"] += t
+                continue
+            base = oc[:-6] if oc.endswith("-start") else oc
+            if base in COLLECTIVES:
+                if oc.endswith("-done"):
+                    continue
+                b = _sig_bytes(op.result_sig)
+                if base == "reduce-scatter":
+                    b = sum(_operand_bytes(op, comp))
+                acc["collectives"][base]["count"] += 1
+                acc["collectives"][base]["bytes"] += b
+                t = _op_traffic(op, comp)
+                acc["traffic_bytes"] += t
+                acc["traffic_major"] += t
+                continue
+            if oc == "dot":
+                acc["dot_flops"] += _dot_flops(op, comp)
+                t = _op_traffic(op, comp)
+                acc["traffic_bytes"] += t
+                acc["traffic_major"] += t
+                continue
+            if oc == "convolution":
+                # flops = 2 * prod(result) * K, K from kernel operand
+                res = _arrays_in(op.result_sig)
+                ker = comp.ops.get(op.operands[1])
+                if res and ker:
+                    n = 1
+                    for d in res[0][1]:
+                        n *= d
+                    ka = _arrays_in(ker.result_sig)
+                    if ka:
+                        kk = 1
+                        for d in ka[0][1]:
+                            kk *= d
+                        # kernel = spatial x in x out; divide by out-channels
+                        # (last dim by XLA default layout here)
+                        kk //= max(ka[0][1][-1], 1)
+                        acc["dot_flops"] += 2.0 * n * kk
+                acc["traffic_bytes"] += _op_traffic(op, comp)
+                continue
+            if oc in _TRIVIAL:
+                continue
+            t = _op_traffic(op, comp)
+            acc["traffic_bytes"] += t
+            # "major" traffic approximates a fusing (TPU) backend: bare
+            # elementwise ops that XLA:CPU leaves unfused are excluded;
+            # slices/updates/copies (real data movement) are kept.
+            if oc in ("dynamic-update-slice", "dynamic-slice", "copy",
+                      "gather", "scatter", "reduce", "reduce-window", "sort",
+                      "transpose", "reverse", "concatenate", "pad", "slice",
+                      "convolution", "select-and-scatter"):
+                acc["traffic_major"] += t
+        return acc
+
+    def _operand_bytes(op: Op, comp: Computation) -> list[int]:
+        out = []
+        for o in op.operands:
+            src = comp.ops.get(o)
+            if src is None:
+                continue
+            sig = src.result_sig
+            if src.opcode == "get-tuple-element":
+                gte = re.search(r"index=(\d+)", src.attrs)
+                parent = comp.ops.get(src.operands[0])
+                if gte and parent is not None:
+                    sig = _tuple_elem_sig(parent.result_sig, int(gte.group(1)))
+            out.append(_sig_bytes(sig))
+        return out
+
+    # ops whose HBM traffic is ~2x the *result* (they read only the region
+    # they produce), NOT result+operands — counting the full operand of a
+    # dynamic-slice on scan-stacked params would bill the whole [L, ...]
+    # stack once per layer iteration.
+    _SLICE_LIKE = {"dynamic-slice", "slice", "gather", "transpose", "copy",
+                   "reverse", "concatenate", "pad", "broadcast", "reshape"}
+
+    def _op_traffic(op: Op, comp: Computation) -> float:
+        if op.opcode in _SLICE_LIKE:
+            return 2.0 * _sig_bytes(op.result_sig)
+        if op.opcode == "dynamic-update-slice":
+            # in-place update: read the update operand + write that region
+            upd = _operand_bytes(op, comp)
+            return 2.0 * (upd[1] if len(upd) > 1 else _sig_bytes(op.result_sig))
+        if op.opcode == "fusion":
+            return _fusion_traffic(op, comp)
+        return _sig_bytes(op.result_sig) + sum(_operand_bytes(op, comp))
+
+    def _fusion_traffic(op: Op, comp: Computation) -> float:
+        """Operand-aware fusion billing.  A fusion that merely *slices* a big
+        loop-carried buffer (fused dynamic-slice) reads only the slice; one
+        that updates it in place (fused dynamic-update-slice, aliased by
+        XLA) writes only the update region.  Billing the full buffer would
+        charge a 4096-step sLSTM scan 17 GB/step (measured 22 PB on
+        xlstm train_4k) for what is physically a 33 MB/step stream."""
+        ob = _operand_bytes(op, comp)
+        res_bytes = _sig_bytes(op.result_sig)
+        m = re.search(r"calls=%?([\w\.\-]+)", op.attrs)
+        body = comps.get(m.group(1)) if m else None
+        if body is None:
+            return res_bytes + sum(ob)
+        pmap = {}
+        for name, bop in body.ops.items():
+            if bop.opcode == "parameter":
+                try:
+                    pmap[int(bop.args.strip())] = name
+                except ValueError:
+                    pass
+        def consumers_of(pname: str) -> list[Op]:
+            """Transitive consumers, looking through pass-through ops."""
+            out, frontier, seen = [], [pname], set()
+            while frontier:
+                cur = frontier.pop()
+                for b in body.ops.values():
+                    if cur in b.operands and b.name not in seen:
+                        seen.add(b.name)
+                        if b.opcode in ("bitcast", "reshape", "copy",
+                                        "convert", "transpose"):
+                            frontier.append(b.name)
+                        elif b.opcode != "tuple":
+                            out.append(b)
+            return out
+
+        adj = list(ob)
+        out_bytes = res_bytes
+        for idx, pname in pmap.items():
+            if idx >= len(adj):
+                continue
+            consumers = consumers_of(pname)
+            if not consumers:
+                continue
+            if all(c.opcode == "dynamic-slice" for c in consumers):
+                adj[idx] = sum(_sig_bytes(c.result_sig) for c in consumers)
+            elif all(c.opcode == "dynamic-update-slice" for c in consumers) \
+                    and adj[idx] == res_bytes:
+                upd = 0
+                for c in consumers:
+                    if len(c.operands) > 1 and c.operands[1] in body.ops:
+                        upd += _sig_bytes(body.ops[c.operands[1]].result_sig)
+                if upd:
+                    adj[idx] = upd
+                    out_bytes = upd
+        return out_bytes + sum(adj)
+
+    res = walk(entry)
+    res["total_collective_bytes"] = sum(
+        v["bytes"] for v in res["collectives"].values())
+
+    if collect_top:
+        tops: list = []
+
+        def walk_top(comp_name: str, mult: float):
+            comp = comps[comp_name]
+            for name in comp.order:
+                op = comp.ops[name]
+                if op.opcode == "while":
+                    body = re.search(r"body=%?([\w\.\-]+)", op.attrs)
+                    bc = re.search(r'"known_trip_count":\{"n":"(\d+)"\}',
+                                   op.attrs)
+                    trips = int(bc.group(1)) if bc else 1
+                    if body:
+                        walk_top(body.group(1), mult * trips)
+                    continue
+                if op.opcode in _TRIVIAL:
+                    continue
+                t = _op_traffic(op, comp)
+                if t > 0:
+                    tops.append((mult * t, mult, op.opcode,
+                                 f"{op.name} in {comp_name}",
+                                 op.result_sig[:60]))
+
+        walk_top(entry, 1.0)
+        tops.sort(key=lambda r: -r[0])
+        res["top_traffic"] = tops[:collect_top]
+    return res

@@ -1,0 +1,46 @@
+"""Production mesh builders.
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (smoke tests must keep seeing 1 device).
+
+Single pod: 16 x 16 = 256 chips, axes (data, model).
+Multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model); the ``pod``
+axis is the FL-cohort axis — each pod is a "client" of the MAB scheduler in
+the cohort-training runtime (distributed/fl_parallel.py) and the pure-DP
+outermost axis for conventional training.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have {len(devs)}; "
+            "the dry-run entrypoint must set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=512 before importing jax")
+    arr = np.asarray(devs[:n]).reshape(shape)
+    return Mesh(arr, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh for tests/examples on however many devices exist."""
+    n = data * model
+    devs = jax.devices()
+    assert len(devs) >= n, (len(devs), n)
+    return Mesh(np.asarray(devs[:n]).reshape(data, model), ("data", "model"))
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Axes the global batch is sharded over (pod included when present)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,121 @@
+"""Step builders: (arch, shape) -> a jit-able step function + abstract args +
+shardings.  Shared by dryrun.py (lower/compile only) and train.py/serve.py
+(real execution on small meshes)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.shapes import SHAPES
+from repro.distributed import sharding
+from repro.models.registry import ModelApi, build
+from repro.optim.sgd import OptimizerConfig
+
+
+@dataclasses.dataclass
+class LoweredSpec:
+    """Everything needed to jit-lower one (arch x shape x mesh) cell."""
+    fn: Callable
+    abstract_args: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    static: dict
+
+
+def _abstract(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def make_train_step(api: ModelApi, opt_cfg: OptimizerConfig):
+    opt = opt_cfg.build()
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(api.loss_fn)(params, batch)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        return new_params, new_opt, loss
+
+    return train_step, opt
+
+
+def make_prefill_step(api: ModelApi, max_len: int):
+    def prefill_step(params, batch):
+        return api.prefill(params, batch, max_len=max_len)
+    return prefill_step
+
+
+def make_decode_step(api: ModelApi):
+    def decode_step(params, cache, tokens, pos):
+        return api.decode_step(params, cache, tokens, pos)
+    return decode_step
+
+
+def build_cell(arch: str, shape: str, mesh: Mesh,
+               fsdp: bool | None = None,
+               opt_cfg: OptimizerConfig | None = None,
+               reduced: bool = False) -> LoweredSpec:
+    """Assemble fn + abstract args + shardings for one dry-run cell."""
+    api = build(arch, reduced=reduced)
+    cell = SHAPES[shape]
+    cfg = api.cfg
+    if fsdp is None:
+        # FSDP on for the big archs (params do not fit replicated-over-data)
+        total, _ = api.param_counts()
+        fsdp = total > 3e9
+    if opt_cfg is None:
+        opt_cfg = OptimizerConfig(name="adamw", lr=3e-4, weight_decay=0.1)
+
+    pshapes = api.param_shapes()
+    pspecs = sharding.param_specs(pshapes, cfg, mesh, fsdp=fsdp)
+    in_specs = api.input_specs(shape)
+    bspecs = sharding.batch_specs(in_specs, mesh)
+
+    if cell.kind == "train":
+        fn, opt = make_train_step(api, opt_cfg)
+        oshapes = jax.eval_shape(opt.init, pshapes)
+        ospecs = sharding.opt_specs(oshapes, pspecs)
+        return LoweredSpec(
+            fn=fn,
+            abstract_args=(pshapes, oshapes, in_specs),
+            in_shardings=(sharding.to_named(pspecs, mesh),
+                          sharding.to_named(ospecs, mesh),
+                          sharding.to_named(bspecs, mesh)),
+            out_shardings=(sharding.to_named(pspecs, mesh),
+                           sharding.to_named(ospecs, mesh),
+                           None),
+            static={"fsdp": fsdp, "opt": opt_cfg.name},
+        )
+
+    if cell.kind == "prefill":
+        fn = make_prefill_step(api, max_len=cell.seq_len)
+        return LoweredSpec(
+            fn=fn,
+            abstract_args=(pshapes, in_specs),
+            in_shardings=(sharding.to_named(pspecs, mesh),
+                          sharding.to_named(bspecs, mesh)),
+            out_shardings=None,
+            static={"fsdp": fsdp},
+        )
+
+    # decode
+    fn = make_decode_step(api)
+    cshapes = api.decode_state_specs(shape)
+    cspecs = sharding.cache_specs(cshapes, cfg, mesh)
+    tokens = in_specs["tokens"]
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    named_c = sharding.to_named(cspecs, mesh)
+    return LoweredSpec(
+        fn=fn,
+        abstract_args=(pshapes, cshapes, tokens, pos),
+        in_shardings=(sharding.to_named(pspecs, mesh), named_c,
+                      sharding.to_named(sharding.batch_specs(
+                          {"tokens": tokens}, mesh), mesh)["tokens"],
+                      sharding.to_named(P(), mesh)),
+        out_shardings=(None, named_c),
+        static={"fsdp": fsdp},
+    )

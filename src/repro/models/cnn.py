@@ -1,0 +1,113 @@
+"""The paper's CIFAR-10 CNN (Sect. IV-B), pure JAX.
+
+Six 3x3 conv layers (32, 32, 64, 64, 128, 128 channels; ReLU + BatchNorm;
+2x2 max-pool after conv pairs 1 and 2), then FC 512 -> FC 192 -> FC 10
+(softmax).  4.59 M parameters == the paper's "approximately 4.6 million model
+parameters (M = 18.3 megabytes in 32-bit float)" — the t_UL numerator in the
+resource model.  (Pooling after *all three* pairs would give 1.44 M params,
+contradicting the published M; the published count pins the architecture.)
+
+BatchNorm is folded as train-mode batch statistics (the paper trains for a
+few epochs per round; we keep running stats in the param tree as non-learned
+leaves updated functionally).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+CONV_CHANNELS = (32, 32, 64, 64, 128, 128)
+POOL_AFTER = (1, 3)          # conv indices followed by 2x2 max-pool
+FC_UNITS = (512, 192)
+N_CLASSES = 10
+
+
+@dataclasses.dataclass(frozen=True)
+class CnnConfig:
+    image_size: int = 32
+    channels: tuple = CONV_CHANNELS
+    pool_after: tuple = POOL_AFTER
+    fc_units: tuple = FC_UNITS
+    n_classes: int = N_CLASSES
+    bn_momentum: float = 0.99
+
+
+def _conv_init(key, c_in, c_out):
+    k1, k2 = jax.random.split(key)
+    fan_in = 3 * 3 * c_in
+    w = jax.random.normal(k1, (3, 3, c_in, c_out), jnp.float32) * jnp.sqrt(2.0 / fan_in)
+    return {"w": w, "b": jnp.zeros((c_out,), jnp.float32),
+            "bn_scale": jnp.ones((c_out,), jnp.float32),
+            "bn_bias": jnp.zeros((c_out,), jnp.float32)}
+
+
+def init(key, cfg: CnnConfig = CnnConfig()) -> dict:
+    keys = jax.random.split(key, len(cfg.channels) + len(cfg.fc_units) + 1)
+    params: dict[str, Any] = {}
+    c_in = 3
+    for i, c_out in enumerate(cfg.channels):
+        params[f"conv{i}"] = _conv_init(keys[i], c_in, c_out)
+        c_in = c_out
+    # spatial dims: 32 -> 16 -> 8 after the two pools
+    spatial = cfg.image_size // (2 ** len(cfg.pool_after))
+    d_in = spatial * spatial * cfg.channels[-1]
+    dims = (d_in,) + cfg.fc_units + (cfg.n_classes,)
+    for j in range(len(dims) - 1):
+        k = keys[len(cfg.channels) + j]
+        params[f"fc{j}"] = {
+            "w": jax.random.normal(k, (dims[j], dims[j + 1]), jnp.float32)
+                 * jnp.sqrt(2.0 / dims[j]),
+            "b": jnp.zeros((dims[j + 1],), jnp.float32),
+        }
+    return params
+
+
+def _batchnorm(x, scale, bias, eps=1e-5):
+    mean = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    return scale * (x - mean) * jax.lax.rsqrt(var + eps) + bias
+
+
+def apply(params: dict, images: jnp.ndarray, cfg: CnnConfig = CnnConfig()) -> jnp.ndarray:
+    """images: [B, H, W, 3] -> logits [B, n_classes]"""
+    x = images
+    for i in range(len(cfg.channels)):
+        p = params[f"conv{i}"]
+        x = jax.lax.conv_general_dilated(
+            x, p["w"], window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = x + p["b"]
+        x = jax.nn.relu(x)
+        x = _batchnorm(x, p["bn_scale"], p["bn_bias"])
+        if i in cfg.pool_after:
+            x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    x = x.reshape(x.shape[0], -1)
+    n_fc = len(cfg.fc_units) + 1
+    for j in range(n_fc):
+        p = params[f"fc{j}"]
+        x = x @ p["w"] + p["b"]
+        if j < n_fc - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def loss_fn(params, batch, cfg: CnnConfig = CnnConfig()):
+    logits = apply(params, batch["x"], cfg)
+    labels = batch["y"]
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+    acc = (jnp.argmax(logits, -1) == labels).mean()
+    return nll, acc
+
+
+def param_count(params) -> int:
+    return sum(p.size for p in jax.tree.leaves(params))
+
+
+def model_bytes(params, dtype_bytes: int = 4) -> float:
+    return float(param_count(params) * dtype_bytes)

@@ -1,0 +1,328 @@
+"""Griffin / RecurrentGemma (De et al., arXiv:2402.19427).
+
+Residual pattern: (recurrent, recurrent, local-attention) repeating — the
+assigned recurrentgemma-9b has 38 layers = 12 full groups + a 2-layer
+recurrent tail.  Every layer = mixer (RG-LRU recurrent block or local MQA)
+followed by a gated-GeLU MLP block, both pre-RMSNorm.
+
+RG-LRU: a_t = exp(c * softplus(-Lambda) * r_t) parameterized so 0<a<1,
+h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t).  Training/prefill uses
+``jax.lax.associative_scan`` over (a, b) pairs — O(log S) depth, TPU-native
+(this is the hardware adaptation of the paper's custom GPU scan kernel; a
+Pallas blocked-scan kernel is provided in kernels/rg_lru.py for the
+VMEM-resident fused form).  Decode carries (h, conv_buf) per recurrent layer
+and a window-sized KV ring cache per attention layer, so ``long_500k``
+decodes with O(window) memory — why this arch runs the 500k shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (LMConfig, apply_rope, constrain_batch,
+                                 dense_init, embed_init, rms_norm,
+                                 softmax_xent)
+
+GROUP = ("rec", "rec", "attn")
+C_SCALE = 8.0          # the paper's c constant
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def rg_lru_scan(x, r, i, lam):
+    """x,r,i: [B,S,W]; lam: [W].  Returns (y [B,S,W], h_last [B,W])."""
+    log_a = -C_SCALE * jax.nn.softplus(lam.astype(jnp.float32)) * \
+        jax.nn.sigmoid(r.astype(jnp.float32))                 # [B,S,W] (<0)
+    a = jnp.exp(log_a)
+    gated = jax.nn.sigmoid(i.astype(jnp.float32)) * x.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+
+    def comb(l, rr):
+        al, bl = l
+        ar, br = rr
+        return al * ar, ar * bl + br
+
+    a_s, y = jax.lax.associative_scan(comb, (a, b), axis=1)
+    return y, y[:, -1]
+
+
+def rg_lru_step(x, r, i, lam, h):
+    """One token: x,r,i [B,W]; h [B,W]."""
+    log_a = -C_SCALE * jax.nn.softplus(lam.astype(jnp.float32)) * \
+        jax.nn.sigmoid(r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * \
+        jax.nn.sigmoid(i.astype(jnp.float32)) * x.astype(jnp.float32)
+    h = a * h + b
+    return h, h
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def init_recurrent_block(key, cfg: LMConfig) -> dict:
+    w = cfg.lru_width or cfg.d_model
+    ks = jax.random.split(key, 7)
+    pd = cfg.param_dtype
+    return {
+        "norm": jnp.zeros((cfg.d_model,), pd),
+        "w_x": dense_init(ks[0], cfg.d_model, w, pd),
+        "w_gate": dense_init(ks[1], cfg.d_model, w, pd),
+        "conv": (jax.random.normal(ks[2], (4, w), jnp.float32) * 0.1).astype(pd),
+        "w_r": dense_init(ks[3], w, w, pd),
+        "w_i": dense_init(ks[4], w, w, pd),
+        "lam": (jax.random.uniform(ks[5], (w,), jnp.float32,
+                                   minval=0.0, maxval=1.0)).astype(jnp.float32),
+        "w_out": dense_init(ks[6], w, cfg.d_model, pd),
+    }
+
+
+def _causal_conv4(x, w):
+    pads = jnp.pad(x, ((0, 0), (3, 0), (0, 0)))
+    return sum(pads[:, i:i + x.shape[1], :] * w[i] for i in range(4))
+
+
+def recurrent_block_apply(p, x, cfg: LMConfig, state=None, decode=False):
+    """state = (h [B,W], conv_buf [B,4,W]) or None."""
+    cdt = cfg.compute_dtype
+    B, S, _ = x.shape
+    w = cfg.lru_width or cfg.d_model
+    y = rms_norm(x, p["norm"], cfg.norm_eps)
+    xb = y @ p["w_x"].astype(cdt)
+    gate = jax.nn.gelu(y @ p["w_gate"].astype(cdt))
+    if state is None:
+        state = (jnp.zeros((B, w), jnp.float32), jnp.zeros((B, 4, w), jnp.float32))
+    h0, conv_buf = state
+    if decode:
+        conv_buf = jnp.concatenate([conv_buf[:, 1:], xb.astype(jnp.float32)], axis=1)
+        # conv in compute dtype to match the training path bit-for-bit-ish
+        c = jnp.einsum("btc,tc->bc", conv_buf.astype(cdt),
+                       p["conv"].astype(cdt)).astype(jnp.float32)
+        r = c @ p["w_r"].astype(jnp.float32)
+        i = c @ p["w_i"].astype(jnp.float32)
+        h, yout = rg_lru_step(c, r, i, p["lam"], h0)
+        yout = yout[:, None]
+    else:
+        c = _causal_conv4(xb, p["conv"].astype(cdt)).astype(jnp.float32)
+        r = c @ p["w_r"].astype(jnp.float32)
+        i = c @ p["w_i"].astype(jnp.float32)
+        yout, h = rg_lru_scan(c, r, i, p["lam"])
+        tail = xb[:, -4:].astype(jnp.float32)
+        pad = jnp.zeros((B, max(0, 4 - S), w), jnp.float32)
+        conv_buf = jnp.concatenate([conv_buf[:, S:], pad, tail], axis=1)[:, -4:]
+    out = (yout.astype(cdt) * gate) @ p["w_out"].astype(cdt)
+    return x + out, (h, conv_buf)
+
+
+def init_attn_block(key, cfg: LMConfig) -> dict:
+    dh = cfg.head_dim
+    ks = jax.random.split(key, 4)
+    pd = cfg.param_dtype
+    return {
+        "norm": jnp.zeros((cfg.d_model,), pd),
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * dh, pd),
+        "wkv": dense_init(ks[1], cfg.d_model, 2 * cfg.n_kv_heads * dh, pd),
+        "wo": dense_init(ks[2], cfg.n_heads * dh, cfg.d_model, pd),
+    }
+
+
+def attn_block_apply(p, x, cfg: LMConfig, positions, cache=None, cache_pos=None,
+                     decode=False):
+    """Local (sliding-window) MQA.  cache = ring buffer {k,v [B,Wnd,KV,dh]}
+    with absolute write index cache_pos (decode) or plain [B,S] window mask
+    (training/prefill)."""
+    cdt = cfg.compute_dtype
+    B, S, _ = x.shape
+    dh, H, KV = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    wnd = cfg.sliding_window
+    y = rms_norm(x, p["norm"], cfg.norm_eps)
+    q = (y @ p["wq"].astype(cdt)).reshape(B, S, H, dh)
+    kv = (y @ p["wkv"].astype(cdt)).reshape(B, S, 2, KV, dh)
+    k, v = kv[:, :, 0], kv[:, :, 1]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if decode:
+        # ring-buffer update at slot pos % wnd
+        slot = cache_pos % wnd
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        cache = {"k": ck, "v": cv}
+        kpos = cache_pos - ((slot - jnp.arange(wnd)) % wnd)   # absolute positions
+        valid = (kpos >= 0) & (kpos > cache_pos - wnd)
+        q = q.reshape(B, S, KV, H // KV, dh)
+        logits = jnp.einsum("bskgd,btkd->bkgst", q, ck).astype(jnp.float32) \
+            * dh ** -0.5
+        logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+        attn = jax.nn.softmax(logits, -1).astype(cdt)
+        o = jnp.einsum("bkgst,btkd->bskgd", attn, cv).reshape(B, S, H * dh)
+    else:
+        from repro.models.layers import _flash_ok, flash_attention
+        q = q.reshape(B, S, KV, H // KV, dh)
+        if _flash_ok(S, S):
+            o = flash_attention(q, k, v, causal=True, window=wnd)
+            o = o.reshape(B, S, H * dh).astype(cdt)
+        else:
+            logits = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32) \
+                * dh ** -0.5
+            qp = positions if positions.ndim == 1 else positions[0]
+            mask = (qp[:, None] >= qp[None, :]) & (qp[:, None] - qp[None, :] < wnd)
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+            attn = jax.nn.softmax(logits, -1).astype(cdt)
+            o = jnp.einsum("bkgst,btkd->bskgd", attn, v).reshape(B, S, H * dh)
+        if cache is not None:
+            # prefill: persist the last `wnd` keys/values into the ring buffer
+            # laid out so slot (pos % wnd) holds position pos
+            last = min(wnd, S)
+            kpad = jnp.zeros((B, wnd, KV, dh), cdt)
+            tailk, tailv = k[:, -last:], v[:, -last:]
+            start = S - last
+            slots = (start + jnp.arange(last)) % wnd
+            kpad = kpad.at[:, slots].set(tailk)
+            vpad = jnp.zeros((B, wnd, KV, dh), cdt).at[:, slots].set(tailv)
+            cache = {"k": kpad, "v": vpad}
+    return x + o @ p["wo"].astype(cdt), cache
+
+
+def init_mlp_block(key, cfg: LMConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    pd = cfg.param_dtype
+    return {
+        "norm": jnp.zeros((cfg.d_model,), pd),
+        "w_gate": dense_init(ks[0], cfg.d_model, cfg.d_ff, pd),
+        "w_up": dense_init(ks[1], cfg.d_model, cfg.d_ff, pd),
+        "w_down": dense_init(ks[2], cfg.d_ff, cfg.d_model, pd),
+    }
+
+
+def mlp_block_apply(p, x, cfg: LMConfig):
+    cdt = cfg.compute_dtype
+    y = rms_norm(x, p["norm"], cfg.norm_eps)
+    f = jax.nn.gelu(y @ p["w_gate"].astype(cdt)) * (y @ p["w_up"].astype(cdt))
+    return x + f @ p["w_down"].astype(cdt)
+
+
+# ---------------------------------------------------------------------------
+# full model: scan over (rec, rec, attn) groups + recurrent tail
+# ---------------------------------------------------------------------------
+
+def _layout(cfg: LMConfig) -> tuple[int, int]:
+    """(n_full_groups, n_tail_recurrent)."""
+    n_groups = cfg.n_layers // len(GROUP)
+    tail = cfg.n_layers - n_groups * len(GROUP)
+    assert tail in (0, 1, 2), cfg.n_layers
+    return n_groups, tail
+
+
+def init(key, cfg: LMConfig) -> dict:
+    G, tail = _layout(cfg)
+    keys = jax.random.split(key, 8)
+    gkeys = jax.random.split(keys[0], G * 6).reshape(G, 6, 2)
+
+    def group_init(k6):
+        return {
+            "rec0": init_recurrent_block(k6[0], cfg),
+            "mlp0": init_mlp_block(k6[1], cfg),
+            "rec1": init_recurrent_block(k6[2], cfg),
+            "mlp1": init_mlp_block(k6[3], cfg),
+            "attn": init_attn_block(k6[4], cfg),
+            "mlp2": init_mlp_block(k6[5], cfg),
+        }
+
+    p = {
+        "embed": {"tok": embed_init(keys[1], cfg.vocab, cfg.d_model,
+                                    cfg.param_dtype)},
+        "groups": jax.vmap(group_init)(gkeys),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+    }
+    tkeys = jax.random.split(keys[2], 2 * max(tail, 1))
+    for t in range(tail):
+        p[f"tail_rec{t}"] = init_recurrent_block(tkeys[2 * t], cfg)
+        p[f"tail_mlp{t}"] = init_mlp_block(tkeys[2 * t + 1], cfg)
+    return p
+
+
+def init_states(cfg: LMConfig, batch: int) -> dict:
+    G, tail = _layout(cfg)
+    w = cfg.lru_width or cfg.d_model
+    wnd = cfg.sliding_window
+    rec = lambda *lead: (jnp.zeros(lead + (batch, w), jnp.float32),
+                         jnp.zeros(lead + (batch, 4, w), jnp.float32))
+    st = {
+        "rec0": rec(G), "rec1": rec(G),
+        "attn": {"k": jnp.zeros((G, batch, wnd, cfg.n_kv_heads, cfg.head_dim),
+                                cfg.compute_dtype),
+                 "v": jnp.zeros((G, batch, wnd, cfg.n_kv_heads, cfg.head_dim),
+                                cfg.compute_dtype)},
+    }
+    for t in range(tail):
+        st[f"tail_rec{t}"] = rec()
+    return st
+
+
+def _stack_forward(params, x, cfg: LMConfig, states, positions,
+                   cache_pos=None, decode=False, want_cache=False):
+    G, tail = _layout(cfg)
+
+    def group_body(x, xs):
+        gp, s_rec0, s_rec1, s_attn = xs
+        x, ns0 = recurrent_block_apply(gp["rec0"], x, cfg, state=s_rec0,
+                                       decode=decode)
+        x = mlp_block_apply(gp["mlp0"], x, cfg)
+        x, ns1 = recurrent_block_apply(gp["rec1"], x, cfg, state=s_rec1,
+                                       decode=decode)
+        x = mlp_block_apply(gp["mlp1"], x, cfg)
+        x, nca = attn_block_apply(gp["attn"], x, cfg, positions,
+                                  cache=s_attn if (decode or want_cache) else None,
+                                  cache_pos=cache_pos, decode=decode)
+        x = mlp_block_apply(gp["mlp2"], x, cfg)
+        if nca is None:
+            nca = s_attn
+        return constrain_batch(x), (ns0, ns1, nca)
+
+    body = jax.checkpoint(group_body) if (cfg.remat and not decode) else group_body
+    x, (ns0, ns1, nattn) = jax.lax.scan(
+        body, x, (params["groups"], states["rec0"], states["rec1"],
+                  states["attn"]))
+    new_states = {"rec0": ns0, "rec1": ns1, "attn": nattn}
+    for t in range(tail):
+        x, ns = recurrent_block_apply(params[f"tail_rec{t}"], x, cfg,
+                                      state=states[f"tail_rec{t}"], decode=decode)
+        x = mlp_block_apply(params[f"tail_mlp{t}"], x, cfg)
+        new_states[f"tail_rec{t}"] = ns
+    return x, new_states
+
+
+def loss_fn(params, batch, cfg: LMConfig):
+    x = params["embed"]["tok"].astype(cfg.compute_dtype)[batch["tokens"]]
+    S = x.shape[1]
+    states = init_states(cfg, x.shape[0])
+    x, _ = _stack_forward(params, x, cfg, states, jnp.arange(S))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["embed"]["tok"].astype(cfg.compute_dtype).T
+    return softmax_xent(logits[:, :-1], batch["tokens"][:, 1:])
+
+
+def prefill(params, batch, cfg: LMConfig, max_len=None):
+    x = params["embed"]["tok"].astype(cfg.compute_dtype)[batch["tokens"]]
+    B, S = x.shape[:2]
+    states = init_states(cfg, B)
+    x, states = _stack_forward(params, x, cfg, states, jnp.arange(S),
+                               want_cache=True)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, -1:] @ params["embed"]["tok"].astype(cfg.compute_dtype).T
+    return logits, states, jnp.full((), S, jnp.int32)
+
+
+def decode_step(params, states, tokens, pos, cfg: LMConfig):
+    x = params["embed"]["tok"].astype(cfg.compute_dtype)[tokens[:, None]]
+    positions = jnp.full((1,), pos, jnp.int32)
+    x, states = _stack_forward(params, x, cfg, states, positions,
+                               cache_pos=pos, decode=True)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["embed"]["tok"].astype(cfg.compute_dtype).T
+    return logits, states

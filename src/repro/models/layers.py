@@ -1,0 +1,548 @@
+"""Shared pure-JAX building blocks for the assigned LM architectures.
+
+Everything is functional: ``init_*`` builds param pytrees (traceable, so
+``jax.eval_shape`` can build abstract params for the dry-run without
+allocating), ``*_apply`` consumes them.  Weight layouts are chosen so the
+tensor-parallel PartitionSpecs in ``repro.distributed.sharding`` hit the
+natural contraction dims (heads / d_ff / experts / vocab).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str = "lm"
+    family: str = "dense"        # dense | moe | vlm | xlstm | griffin | encdec
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab: int = 1024
+    d_head: int | None = None    # default d_model // n_heads
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    sliding_window: int | None = None   # local attention window (griffin attn blocks)
+    moe: MoEConfig | None = None
+    # griffin-specific
+    lru_width: int | None = None
+    block_pattern: tuple = ()    # e.g. ("rec", "rec", "attn")
+    # xlstm-specific: chunk length of the chunkwise-parallel mLSTM.  Balances
+    # state-write traffic (C is [dh,dh] per chunk boundary, ~1/chunk) against
+    # intra-chunk block matrices (~chunk^2); see EXPERIMENTS.md §Perf A.
+    mlstm_chunk: int = 256
+    # encdec-specific
+    n_enc_layers: int = 0
+    # vlm-specific
+    n_patches: int = 0
+    patch_embed_dim: int = 0
+    # numerics / impl
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    attn_impl: str = "xla"       # xla | pallas | pallas_interpret
+    max_seq: int = 8192          # rope table length for training/prefill
+    # shard attention by batch over ALL mesh axes instead of by head.
+    # Needed when the head count does not divide the TP axis (llava: 56
+    # heads on 16-way TP) — otherwise GSPMD shards k/v over d_head and puts
+    # a partial-sum all-reduce INSIDE the flash kv loop (measured 57 TB of
+    # a 59 TB collective total on llava prefill_32k; EXPERIMENTS §Perf).
+    shard_attn_batch: bool = False
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head is not None else self.d_model // self.n_heads
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * (d_in ** -0.5)).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(ms + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [B, S, H, Dh]; positions: [S] or [B, S]."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)                       # [Dh/2]
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [(B,)S,Dh/2]
+    if angles.ndim == 2:                                    # [S, Dh/2]
+        angles = angles[None, :, None, :]                   # [1,S,1,Dh/2]
+    else:                                                   # [B, S, Dh/2]
+        angles = angles[:, :, None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blockwise (flash) attention — pure-JAX online softmax
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    q_offset=0, kv_valid_len=None,
+                    q_block: int = 512, kv_block: int = 1024) -> jnp.ndarray:
+    """Blockwise attention with online softmax (Rabe&Staats / FlashAttention
+    dataflow, expressed in lax.scan so XLA never materializes [S,S]).
+
+    q: [B, Sq, KV, G, dh]; k, v: [B, Skv, KV, dh].  Returns [B, Sq, KV, G, dh].
+    This is also the numerical reference for kernels/flash_attention.py.
+    """
+    B, Sq, KV, G, dh = q.shape
+    Skv = k.shape[1]
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Skv)
+    assert Sq % q_block == 0 and Skv % kv_block == 0, (Sq, q_block, Skv, kv_block)
+    nq, nk = Sq // q_block, Skv // kv_block
+    scale = dh ** -0.5
+    dt = q.dtype
+
+    qb = q.reshape(B, nq, q_block, KV, G, dh).transpose(1, 0, 3, 4, 2, 5)
+    kb = k.reshape(B, nk, kv_block, KV, dh).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(B, nk, kv_block, KV, dh).transpose(1, 0, 3, 2, 4)
+    # qb: [nq,B,KV,G,qb,dh]; kb/vb: [nk,B,KV,kb,dh]
+
+    def q_body(_, qx):
+        qi, qblk = qx                       # [], [B,KV,G,qb,dh]
+        q_pos = q_offset + qi * q_block + jnp.arange(q_block)
+
+        def kv_body(carry, kx):
+            m, l, acc = carry
+            ki, kblk, vblk = kx
+            kv_pos = ki * kv_block + jnp.arange(kv_block)
+            logits = jnp.einsum("bkgqd,bktd->bkgqt",
+                                qblk.astype(jnp.float32),
+                                kblk.astype(jnp.float32)) * scale
+            mask = jnp.ones((q_block, kv_block), bool)
+            if causal:
+                mask &= q_pos[:, None] >= kv_pos[None, :]
+            if window is not None:
+                mask &= q_pos[:, None] - kv_pos[None, :] < window
+            if kv_valid_len is not None:
+                mask &= (kv_pos < kv_valid_len)[None, :]
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+            m_new = jnp.maximum(m, logits.max(-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,bktd->bkgqd", p, vblk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, q_block), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_block), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_block, dh), jnp.float32)
+        # checkpoint the kv step: without it, jax AD saves the [qb, kb]
+        # logits/p matrices for every kv block as scan residuals — exactly
+        # the O(S^2) traffic flash attention exists to avoid (measured 15x
+        # HBM-traffic inflation on yi-9b train_4k).  With it, bwd recomputes
+        # the block logits from (q, k, v), the FlashAttention-bwd dataflow.
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_body), (m0, l0, a0), (jnp.arange(nk), kb, vb))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(dt)
+
+    _, ob = jax.lax.scan(q_body, None, (jnp.arange(nq), qb))
+    # ob: [nq,B,KV,G,qb,dh] -> [B,Sq,KV,G,dh]
+    return ob.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, KV, G, dh)
+
+
+def constrain_batch(x: jnp.ndarray, batch_dim: int = 0) -> jnp.ndarray:
+    """Pin activation batch-sharding over the non-model mesh axes.
+
+    GSPMD occasionally drops batch sharding through reshape-heavy blocks
+    (measured: the mLSTM chunkwise scan replicated the FULL global batch on
+    every device — 20x compute and 34 TB of collectives on xlstm train_4k).
+    Applied at every residual-block boundary, exactly like MaxText's logical
+    activation sharding rules.  No-op outside a mesh context.
+    """
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return x
+    ba = tuple(a for a in mesh.axis_names if a != "model")
+    if not ba:
+        return x
+    n = 1
+    for a in ba:
+        n *= mesh.shape[a]
+    if x.shape[batch_dim] % n:
+        return x
+    spec = [None] * x.ndim
+    spec[batch_dim] = ba
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def _context_parallel_flash(q, k, v, *, causal, window, kv_valid_len):
+    """Context-parallel attention for head counts that do not divide the TP
+    axis (llava: 56 heads on 16-way TP): batch over the data/pod axes,
+    *q-sequence* over the model axis, k/v replicated over model.  Inside the
+    shard_map everything is local — by construction no collective can appear
+    inside the flash loops (GSPMD's head/dh sharding otherwise inserts a
+    partial-sum all-reduce per kv block; see EXPERIMENTS.md §Perf B).
+
+    Returns None if no ambient mesh fits (tests without a mesh, tiny
+    batches), in which case the caller falls back to the plain path.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    am = jax.sharding.get_abstract_mesh()
+    if am is None or "model" not in am.axis_names:
+        return None
+    ba = tuple(a for a in am.axis_names if a != "model")
+    n_batch = 1
+    for a in ba:
+        n_batch *= am.shape[a]
+    B, Sq = q.shape[0], q.shape[1]
+    if B % n_batch or Sq % am.shape["model"]:
+        return None
+    shard_sq = Sq // am.shape["model"]
+    valid = jnp.asarray(kv_valid_len if kv_valid_len is not None else
+                        k.shape[1], jnp.int32)
+
+    def body(q_l, k_l, v_l, valid_l):
+        off = jax.lax.axis_index("model") * shard_sq
+        return flash_attention(q_l, k_l, v_l, causal=causal, window=window,
+                               q_offset=off, kv_valid_len=valid_l)
+
+    return shard_map(
+        body, mesh=am,
+        in_specs=(P(ba, "model", None, None, None),
+                  P(ba, None, None, None), P(ba, None, None, None), P()),
+        out_specs=P(ba, "model", None, None, None),
+        check_rep=False,
+    )(q, k, v, valid)
+
+
+FLASH_MIN_SEQ = 1024      # below this the naive einsum path is cheaper/simpler
+
+
+def _flash_ok(sq: int, skv: int) -> bool:
+    return (sq >= FLASH_MIN_SEQ or skv >= FLASH_MIN_SEQ) and \
+        sq % min(512, sq) == 0 and skv % min(1024, skv) == 0
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA + optional qk-norm / sliding window)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: LMConfig) -> dict:
+    ks = jax.random.split(key, 5)
+    dh, h, kv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, h * dh, cfg.param_dtype),
+        "wk": dense_init(ks[1], cfg.d_model, kv * dh, cfg.param_dtype),
+        "wv": dense_init(ks[2], cfg.d_model, kv * dh, cfg.param_dtype),
+        "wo": dense_init(ks[3], h * dh, cfg.d_model, cfg.param_dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((dh,), cfg.param_dtype)
+        p["k_norm"] = jnp.zeros((dh,), cfg.param_dtype)
+    return p
+
+
+def _mha_mask(q_pos, kv_pos, window: int | None, causal: bool = True):
+    """[Sq, Skv] boolean mask, True = attend."""
+    m = jnp.ones((q_pos.shape[-1], kv_pos.shape[-1]), bool)
+    if causal:
+        m &= q_pos[:, None] >= kv_pos[None, :]
+    if window is not None:
+        m &= q_pos[:, None] - kv_pos[None, :] < window
+    return m
+
+
+def attention_apply(p: dict, x: jnp.ndarray, cfg: LMConfig,
+                    positions: jnp.ndarray,
+                    kv_cache: dict | None = None,
+                    cache_pos: jnp.ndarray | None = None,
+                    cross_kv: jnp.ndarray | None = None,
+                    window: int | None = None,
+                    causal: bool = True):
+    """Returns (out [B,S,D], new_kv_cache|None).
+
+    * training / prefill: kv_cache=None -> full self-attention over x
+      (prefill additionally returns the built cache when ``kv_cache`` is a
+      dict of preallocated buffers with cache_pos=0).
+    * decode: kv_cache given, x is [B,1,D]; cache updated at cache_pos.
+    * cross-attention: cross_kv = encoder output [B, Senc, D].
+    """
+    B, S, _ = x.shape
+    dh, h, kv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    cdt = cfg.compute_dtype
+
+    q = (x @ p["wq"].astype(cdt)).reshape(B, S, h, dh)
+    src = cross_kv if cross_kv is not None else x
+    k = (src @ p["wk"].astype(cdt)).reshape(B, src.shape[1], kv, dh)
+    v = (src @ p["wv"].astype(cdt)).reshape(B, src.shape[1], kv, dh)
+
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    if cross_kv is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        kv_positions = positions
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None and cross_kv is None:
+        # write current k/v into the cache at cache_pos
+        idx = cache_pos  # scalar (decode) or 0 (prefill writes [0, S))
+        ck = jax.lax.dynamic_update_slice(kv_cache["k"], k, (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(kv_cache["v"], v, (0, idx, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck, cv
+        kv_pos = jnp.arange(k.shape[1])
+        valid = kv_pos[None, :] <= (cache_pos + S - 1)
+    else:
+        kv_pos = jnp.arange(k.shape[1])
+        valid = None
+
+    # GQA: fold q heads into groups over kv heads
+    q = q.reshape(B, S, kv, cfg.q_per_kv, dh)
+    Skv = k.shape[1]
+    if S > 1 and _flash_ok(S, Skv):
+        valid = (cache_pos + S) if new_cache is not None else None
+        out = None
+        if cfg.shard_attn_batch:
+            out = _context_parallel_flash(
+                q, k, v, causal=(causal and cross_kv is None),
+                window=window, kv_valid_len=valid)
+        if out is None and cfg.attn_impl.startswith("pallas") and \
+                window is None and valid is None and cross_kv is None:
+            # Pallas kernel fwd + recompute-based custom VJP
+            from repro.kernels.ops import flash_attention_trainable
+            out = flash_attention_trainable(
+                q, k, v, causal,
+                cfg.attn_impl == "pallas_interpret" or None)
+        if out is None:
+            # blockwise path: never materializes [S, Skv]
+            out = flash_attention(
+                q, k, v, causal=(causal and cross_kv is None), window=window,
+                q_offset=0, kv_valid_len=valid)
+        out = out.reshape(B, S, h * dh).astype(cdt)
+    else:
+        scale = dh ** -0.5
+        logits = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32) * scale
+        if cross_kv is None:
+            q_pos = positions if positions.ndim == 1 else positions[0]
+            mask = _mha_mask(q_pos, kv_pos, window, causal=causal)
+            if valid is not None:
+                mask = mask & valid[0][None, :]
+            logits = jnp.where(mask[None, None, None, :, :], logits, -1e30)
+        attn = jax.nn.softmax(logits, axis=-1).astype(cdt)
+        out = jnp.einsum("bkgst,btkd->bskgd", attn, v).reshape(B, S, h * dh)
+    return out @ p["wo"].astype(cdt), new_cache
+
+
+def init_kv_cache(cfg: LMConfig, batch: int, max_len: int, layers_dim: int | None = None):
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    if layers_dim is not None:
+        shape = (layers_dim,) + shape
+    return {"k": jnp.zeros(shape, cfg.compute_dtype),
+            "v": jnp.zeros(shape, cfg.compute_dtype)}
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: LMConfig, d_ff: int | None = None) -> dict:
+    ks = jax.random.split(key, 3)
+    f = d_ff or cfg.d_ff
+    return {
+        "w_gate": dense_init(ks[0], cfg.d_model, f, cfg.param_dtype),
+        "w_up": dense_init(ks[1], cfg.d_model, f, cfg.param_dtype),
+        "w_down": dense_init(ks[2], f, cfg.d_model, cfg.param_dtype),
+    }
+
+
+def mlp_apply(p: dict, x: jnp.ndarray, cfg: LMConfig) -> jnp.ndarray:
+    cdt = cfg.compute_dtype
+    g = jax.nn.silu(x @ p["w_gate"].astype(cdt))
+    u = x @ p["w_up"].astype(cdt)
+    return (g * u) @ p["w_down"].astype(cdt)
+
+
+# ---------------------------------------------------------------------------
+# MoE: top-k router + capacity-based gather/scatter dispatch (sort-free)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: LMConfig) -> dict:
+    mc = cfg.moe
+    ks = jax.random.split(key, 5)
+    e, f = mc.n_experts, mc.d_ff_expert
+    scale_in = cfg.d_model ** -0.5
+    scale_out = f ** -0.5
+    p = {
+        "router": dense_init(ks[0], cfg.d_model, e, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, cfg.d_model, f), jnp.float32)
+                   * scale_in).astype(cfg.param_dtype),
+        "w_up": (jax.random.normal(ks[2], (e, cfg.d_model, f), jnp.float32)
+                 * scale_in).astype(cfg.param_dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, cfg.d_model), jnp.float32)
+                   * scale_out).astype(cfg.param_dtype),
+    }
+    if mc.n_shared:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=mc.d_ff_expert * mc.n_shared)
+    return p
+
+
+def moe_apply(p: dict, x: jnp.ndarray, cfg: LMConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (out [B,S,D], aux_loss scalar).  Capacity-dropping dispatch:
+    tokens beyond an expert's capacity C = ceil(T*k/E * cf) are dropped
+    (standard GShard/Switch semantics; MaxText-style scatter into [E,C,D]
+    buffers so expert matmuls are dense [E,C,D]x[E,D,F])."""
+    mc = cfg.moe
+    B, S, D = x.shape
+    cdt = cfg.compute_dtype
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                     # [T, E]
+    gate_vals, expert_idx = jax.lax.top_k(probs, mc.top_k)       # [T, k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balancing loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(0)
+    one_hot_top1 = jax.nn.one_hot(expert_idx[:, 0], mc.n_experts, dtype=jnp.float32)
+    ce = one_hot_top1.mean(0)
+    aux = mc.n_experts * jnp.sum(me * ce) * mc.router_aux_weight
+
+    cap = int(max(1, round(T * mc.top_k / mc.n_experts * mc.capacity_factor)))
+
+    flat_e = expert_idx.reshape(-1)                              # [T*k]
+    # position of each assignment within its expert, via one-hot cumsum
+    onehot = jax.nn.one_hot(flat_e, mc.n_experts, dtype=jnp.int32)   # [T*k, E]
+    pos_in_e = (jnp.cumsum(onehot, axis=0) - onehot).sum(-1) * 0 + \
+               jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - onehot,
+                                   flat_e[:, None], axis=1)[:, 0]
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, flat_e * cap + pos_in_e, mc.n_experts * cap)  # overflow slot
+
+    # scatter tokens into [E*cap(+1), D]
+    buf = jnp.zeros((mc.n_experts * cap + 1, D), cdt)
+    tok_idx = jnp.repeat(jnp.arange(T), mc.top_k)
+    buf = buf.at[slot].set(xt[tok_idx].astype(cdt), mode="drop")
+    ebuf = buf[:-1].reshape(mc.n_experts, cap, D)
+
+    # expert MLPs: dense batched matmuls
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", ebuf, p["w_gate"].astype(cdt)))
+    u = jnp.einsum("ecd,edf->ecf", ebuf, p["w_up"].astype(cdt))
+    y = jnp.einsum("ecf,efd->ecd", g * u, p["w_down"].astype(cdt))   # [E,cap,D]
+
+    # gather back and combine with gates
+    yflat = jnp.concatenate([y.reshape(mc.n_experts * cap, D),
+                             jnp.zeros((1, D), cdt)], axis=0)
+    per_assign = yflat[slot]                                     # [T*k, D]
+    w = (gate_vals.reshape(-1) * keep).astype(cdt)
+    out = jax.ops.segment_sum(per_assign * w[:, None], tok_idx, num_segments=T)
+
+    if mc.n_shared:
+        out = out + mlp_apply(p["shared"], xt, cfg)
+    return out.reshape(B, S, D), aux
+
+
+# ---------------------------------------------------------------------------
+# LM head / embedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg: LMConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"tok": embed_init(k1, cfg.vocab, cfg.d_model, cfg.param_dtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(k2, cfg.d_model, cfg.vocab, cfg.param_dtype)
+    return p
+
+
+def embed_apply(p: dict, tokens: jnp.ndarray, cfg: LMConfig) -> jnp.ndarray:
+    return p["tok"].astype(cfg.compute_dtype)[tokens]
+
+
+def unembed_apply(p: dict, x: jnp.ndarray, cfg: LMConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        w = p["tok"].astype(cfg.compute_dtype).T
+    else:
+        w = p["unembed"].astype(cfg.compute_dtype)
+    return x @ w
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean cross-entropy in fp32; logits [.., V], labels [..] int.
+
+    The gold logit is extracted with a one-hot contraction rather than
+    ``take_along_axis`` so a vocab-sharded (TP) logits tensor never gets
+    all-gathered: each shard contributes its partial sum and GSPMD inserts a
+    scalar all-reduce (measured 44 GB -> ~3 GB temp on smollm train_4k)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    nll = logz - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()

@@ -1,0 +1,152 @@
+"""Architecture registry: ``--arch <id>`` -> a uniform ModelApi.
+
+Every assigned architecture (plus the paper's CNN) is a selectable config.
+The API exposes exactly what the launcher/dry-run needs:
+  init(key)                      -> params            (traceable; eval_shape-able)
+  loss_fn(params, batch)         -> scalar            (train shapes)
+  prefill(params, batch)         -> (logits, cache, pos)
+  decode_step(params, cache, tokens, pos) -> (logits, cache)
+  input_specs(shape)             -> batch of ShapeDtypeStructs
+  decode_state_specs(shape)      -> cache ShapeDtypeStructs
+  param_counts()                 -> (total, active)   (MoE: active < total)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import importlib
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES, ShapeCell, supported
+from repro.models.layers import LMConfig
+
+ARCH_MODULES = {
+    "yi-9b": "yi_9b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+    "smollm-135m": "smollm_135m",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe",
+    "kimi-k2-1t-a32b": "kimi_k2",
+    "llava-next-34b": "llava_next_34b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+}
+
+FAMILY_MODULES = {
+    "dense": "repro.models.transformer",
+    "moe": "repro.models.transformer",
+    "vlm": "repro.models.transformer",
+    "xlstm": "repro.models.xlstm",
+    "griffin": "repro.models.griffin",
+    "encdec": "repro.models.encdec",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    name: str
+    cfg: LMConfig
+    init: Callable
+    loss_fn: Callable
+    prefill: Callable
+    decode_step: Callable
+    input_specs: Callable[[str], dict]
+    decode_state_specs: Callable[[str], Any]
+    supports: Callable[[str], tuple[bool, str]]
+
+    def param_shapes(self):
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    def param_counts(self) -> tuple[int, int]:
+        """(total, active) parameter counts from abstract shapes."""
+        import math
+        shapes = self.param_shapes()
+        total = sum(math.prod(x.shape) for x in jax.tree.leaves(shapes))
+        active = total
+        if self.cfg.moe is not None:
+            mc = self.cfg.moe
+            flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+            expert = sum(
+                math.prod(x.shape) for path, x in flat
+                if any(getattr(k, "key", None) == "moe" for k in path)
+                and any(getattr(k, "key", None) in ("w_gate", "w_up", "w_down")
+                        for k in path)
+                and not any(getattr(k, "key", None) == "shared" for k in path))
+            active = total - expert + int(expert * mc.top_k / mc.n_experts)
+        return total, active
+
+
+def _lm_input_specs(cfg: LMConfig, cell: ShapeCell) -> dict:
+    B, S = cell.global_batch, cell.seq_len
+    tok = lambda b, s: jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.family == "vlm":
+        text = S - cfg.n_patches
+        assert text > 0, (cfg.name, cell.name)
+        specs = {"tokens": tok(B, text if cell.kind != "decode" else text),
+                 "patch_embeds": jax.ShapeDtypeStruct(
+                     (B, cfg.n_patches, cfg.patch_embed_dim), jnp.bfloat16)}
+        if cell.kind == "decode":
+            specs = {"tokens": jax.ShapeDtypeStruct((B,), jnp.int32)}
+        return specs
+    if cfg.family == "encdec":
+        if cell.kind == "train" or cell.kind == "prefill":
+            half = S // 2
+            return {"frames": jax.ShapeDtypeStruct((B, half, cfg.d_model),
+                                                   jnp.bfloat16),
+                    "tokens": tok(B, half)}
+        return {"tokens": jax.ShapeDtypeStruct((B,), jnp.int32)}
+    if cell.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B,), jnp.int32)}
+    return {"tokens": tok(B, S)}
+
+
+def _decode_state_specs(cfg: LMConfig, cell: ShapeCell, family_mod) -> Any:
+    """Abstract cache/state for decode shapes (no allocation)."""
+    B, S = cell.global_batch, cell.seq_len
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models.layers import init_kv_cache
+        return jax.eval_shape(
+            lambda: init_kv_cache(cfg, B, S, layers_dim=cfg.n_layers))
+    if cfg.family == "xlstm":
+        return jax.eval_shape(lambda: family_mod.init_states(cfg, B))
+    if cfg.family == "griffin":
+        return jax.eval_shape(lambda: family_mod.init_states(cfg, B))
+    if cfg.family == "encdec":
+        from repro.configs.seamless_m4t_medium import ENC_STUB_LEN
+        from repro.models.layers import init_kv_cache
+
+        def mk():
+            return {"self": init_kv_cache(cfg, B, S, layers_dim=cfg.n_layers),
+                    "enc_out": jnp.zeros((B, ENC_STUB_LEN, cfg.d_model),
+                                         cfg.compute_dtype)}
+        return jax.eval_shape(mk)
+    raise ValueError(cfg.family)
+
+
+@functools.lru_cache(maxsize=None)
+def build(arch: str, reduced: bool = False) -> ModelApi:
+    mod = importlib.import_module(f"repro.configs.{ARCH_MODULES[arch]}")
+    cfg: LMConfig = mod.REDUCED if reduced else mod.CONFIG
+    family_mod = importlib.import_module(FAMILY_MODULES[cfg.family])
+
+    return ModelApi(
+        name=arch,
+        cfg=cfg,
+        init=functools.partial(family_mod.init, cfg=cfg),
+        loss_fn=functools.partial(family_mod.loss_fn, cfg=cfg),
+        prefill=functools.partial(family_mod.prefill, cfg=cfg),
+        decode_step=functools.partial(family_mod.decode_step, cfg=cfg),
+        input_specs=lambda s, _c=cfg: _lm_input_specs(_c, SHAPES[s]),
+        decode_state_specs=lambda s, _c=cfg, _m=family_mod: _decode_state_specs(
+            _c, SHAPES[s], _m),
+        supports=lambda s, _a=arch: supported(_a, s),
+    )
+
+
+def list_archs() -> list[str]:
+    return list(ARCH_MODULES)

@@ -1,0 +1,168 @@
+"""Decoder-only transformer (dense / MoE / VLM backbones).
+
+Layer stack is ``lax.scan`` over stacked per-layer params — this keeps the
+HLO size O(1) in depth (compile-tractable for the 61-layer Kimi-K2 dry-run on
+this 1-core container) and is the standard production pattern (MaxText).
+
+Three entry points per model, matching the assigned input shapes:
+  * ``loss_fn(params, batch)``          — train_4k
+  * ``prefill(params, tokens)``         — prefill_32k (builds the KV cache)
+  * ``decode_step(params, cache, tok)`` — decode_32k / long_500k
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (LMConfig, attention_apply, constrain_batch,
+                                 embed_apply, init_attention, init_embed,
+                                 init_kv_cache, init_mlp, init_moe, mlp_apply,
+                                 moe_apply, rms_norm, softmax_xent,
+                                 unembed_apply)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: LMConfig) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "attn_norm": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+        "mlp_norm": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+        "attn": init_attention(k1, cfg),
+    }
+    if cfg.moe is not None:
+        p["moe"] = init_moe(k2, cfg)
+    else:
+        p["mlp"] = init_mlp(k3, cfg)
+    return p
+
+
+def init(key, cfg: LMConfig) -> dict:
+    k_emb, k_layers, k_extra = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys)
+    p = {
+        "embed": init_embed(k_emb, cfg),
+        "layers": layers,
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+    }
+    if cfg.family == "vlm":
+        p["patch_proj"] = (jax.random.normal(
+            k_extra, (cfg.patch_embed_dim, cfg.d_model), jnp.float32)
+            * cfg.patch_embed_dim ** -0.5).astype(cfg.param_dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _block(pl: dict, x: jnp.ndarray, cfg: LMConfig, positions,
+           kv_cache=None, cache_pos=None):
+    """One transformer block. Returns (x, new_cache, aux)."""
+    h, new_cache = attention_apply(
+        pl["attn"], rms_norm(x, pl["attn_norm"], cfg.norm_eps), cfg,
+        positions, kv_cache=kv_cache, cache_pos=cache_pos,
+        window=cfg.sliding_window)
+    x = x + h
+    y = rms_norm(x, pl["mlp_norm"], cfg.norm_eps)
+    if cfg.moe is not None:
+        m, aux = moe_apply(pl["moe"], y, cfg)
+    else:
+        m, aux = mlp_apply(pl["mlp"], y, cfg), jnp.zeros((), jnp.float32)
+    return constrain_batch(x + m), new_cache, aux
+
+
+def _embed_inputs(params, batch, cfg: LMConfig):
+    """tokens [B,S] (+ optional patch_embeds [B,P,pd]) -> activations."""
+    x = embed_apply(params["embed"], batch["tokens"], cfg)
+    if cfg.family == "vlm":
+        pe = batch["patch_embeds"].astype(cfg.compute_dtype) @ \
+            params["patch_proj"].astype(cfg.compute_dtype)
+        x = jnp.concatenate([pe, x], axis=1)   # image prefix then text
+    return x
+
+
+def forward(params: dict, batch: dict, cfg: LMConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward: returns (logits [B,S,V], moe_aux)."""
+    x = _embed_inputs(params, batch, cfg)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    def body(carry, pl):
+        x, aux = carry
+        x, _, a = _block(pl, x, cfg, positions)
+        return (x, aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed_apply(params["embed"], x, cfg), aux
+
+
+def loss_fn(params: dict, batch: dict, cfg: LMConfig) -> jnp.ndarray:
+    logits, aux = forward(params, batch, cfg)
+    if cfg.family == "vlm":
+        logits = logits[:, cfg.n_patches:]      # text positions only
+    return softmax_xent(logits[:, :-1], batch["tokens"][:, 1:]) + aux
+
+
+# ---------------------------------------------------------------------------
+# inference: prefill + decode
+# ---------------------------------------------------------------------------
+
+def prefill(params: dict, batch: dict, cfg: LMConfig, max_len: int | None = None):
+    """Builds the KV cache over the prompt; returns (last_logits, cache, pos)."""
+    x = _embed_inputs(params, batch, cfg)
+    B, S, _ = x.shape
+    max_len = max_len or S
+    positions = jnp.arange(S)
+    cache0 = init_kv_cache(cfg, B, max_len, layers_dim=cfg.n_layers)
+
+    def body(x, xs):
+        pl, cache_l = xs
+        x, new_cache, _ = _block(pl, x, cfg, positions,
+                                 kv_cache=cache_l, cache_pos=0)
+        return x, new_cache
+
+    x, cache = jax.lax.scan(body, x, (params["layers"], cache0))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed_apply(params["embed"], x[:, -1:], cfg)
+    return logits, cache, jnp.full((), S, jnp.int32)
+
+
+def decode_step(params: dict, cache: Any, tokens: jnp.ndarray,
+                pos: jnp.ndarray, cfg: LMConfig):
+    """One decode step: tokens [B] -> (logits [B,1,V], new_cache).
+
+    ``pos`` is the number of tokens already in the cache (scalar).
+    The KV cache is [L, B, max_len, KV, Dh]; attention masks positions > pos.
+    """
+    x = embed_apply(params["embed"], tokens[:, None], cfg)
+    positions = jnp.full((1,), pos, jnp.int32)
+
+    def body(x, xs):
+        pl, cache_l = xs
+        x, new_cache, _ = _block(pl, x, cfg, positions,
+                                 kv_cache=cache_l, cache_pos=pos)
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed_apply(params["embed"], x, cfg), new_cache
+
+
+# ---------------------------------------------------------------------------
+# convenience jitted wrappers (single-host examples/tests)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def jit_loss(params, batch, cfg: LMConfig):
+    return loss_fn(params, batch, cfg)

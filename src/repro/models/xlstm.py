@@ -1,0 +1,386 @@
+"""xLSTM (Beck et al., arXiv:2405.04517) — sLSTM + mLSTM blocks.
+
+* mLSTM: matrix-memory cell with exponential gating.  Implemented in the
+  *chunkwise-parallel* form (quadratic within a chunk, recurrent state across
+  chunks) — numerically identical to the step recurrence (property-tested in
+  tests/test_xlstm.py against the sequential reference) and the form that
+  maps onto the MXU.  Decode uses the exact O(1)/token recurrence, which is
+  why this arch runs the ``long_500k`` shape that full-attention archs skip.
+* sLSTM: scalar cell with head-block-diagonal recurrence -> inherently
+  sequential, implemented with ``lax.scan`` over time.
+* Block layout follows xLSTM[7:1]: groups of 7 mLSTM blocks + 1 sLSTM block
+  (48 layers = 6 groups for the assigned xlstm-1.3b).
+
+The spec's ``d_ff=0`` means no standalone FFN blocks: mLSTM blocks are
+pre-up-projection (factor 2) and the sLSTM block carries its own gated FFN
+(factor 4/3), per the paper's block designs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (LMConfig, constrain_batch, dense_init,
+                                 embed_init, rms_norm, softmax_xent)
+
+MLSTM_PER_GROUP = 7
+SLSTM_PER_GROUP = 1
+LAYERS_PER_GROUP = MLSTM_PER_GROUP + SLSTM_PER_GROUP
+
+
+@dataclasses.dataclass(frozen=True)
+class XlstmDims:
+    inner: int          # mLSTM expanded dim (2 * d_model)
+    n_heads: int
+    head_dim: int
+    ffn: int            # sLSTM post-FFN dim
+
+
+def dims(cfg: LMConfig) -> XlstmDims:
+    inner = 2 * cfg.d_model
+    return XlstmDims(inner=inner, n_heads=cfg.n_heads,
+                     head_dim=inner // cfg.n_heads,
+                     ffn=int(round(cfg.d_model * 4 / 3 / 128)) * 128)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell
+# ---------------------------------------------------------------------------
+
+def init_mlstm_block(key, cfg: LMConfig) -> dict:
+    d = dims(cfg)
+    ks = jax.random.split(key, 8)
+    pd = cfg.param_dtype
+    return {
+        "norm": jnp.zeros((cfg.d_model,), pd),
+        "w_up": dense_init(ks[0], cfg.d_model, d.inner, pd),
+        "w_gate": dense_init(ks[1], cfg.d_model, d.inner, pd),
+        "w_q": dense_init(ks[2], d.inner, d.inner, pd),
+        "w_k": dense_init(ks[3], d.inner, d.inner, pd),
+        "w_v": dense_init(ks[4], d.inner, d.inner, pd),
+        "w_if": dense_init(ks[5], d.inner, 2 * d.n_heads, pd),  # i~, f~ per head
+        "conv": (jax.random.normal(ks[6], (4, d.inner), jnp.float32) * 0.1).astype(pd),
+        "w_down": dense_init(ks[7], d.inner, cfg.d_model, pd),
+        "out_norm": jnp.zeros((d.inner,), pd),
+    }
+
+
+def _causal_conv4(x, w):
+    """Depthwise causal conv, kernel 4. x [B,S,C], w [4,C]."""
+    pads = jnp.pad(x, ((0, 0), (3, 0), (0, 0)))
+    return sum(pads[:, i:i + x.shape[1], :] * w[i] for i in range(4))
+
+
+def mlstm_chunkwise(q, k, v, i_pre, f_pre, state, chunk: int):
+    """Chunkwise-parallel mLSTM scan.
+
+    q,k,v: [B,S,H,D]; i_pre,f_pre: [B,S,H] pre-activation gates.
+    state: (C [B,H,D,D], n [B,H,D], m [B,H]).
+    Returns (h [B,S,H,D], new_state).  Exact (stabilized) recurrence.
+    """
+    B, S, H, D = q.shape
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    q = q.reshape(B, nc, chunk, H, D).transpose(1, 0, 3, 2, 4)  # [nc,B,H,L,D]
+    k = k.reshape(B, nc, chunk, H, D).transpose(1, 0, 3, 2, 4)
+    v = v.reshape(B, nc, chunk, H, D).transpose(1, 0, 3, 2, 4)
+    ig = i_pre.reshape(B, nc, chunk, H).transpose(1, 0, 3, 2)    # [nc,B,H,L]
+    lf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    lf = lf.reshape(B, nc, chunk, H).transpose(1, 0, 3, 2)
+
+    scale = D ** -0.5
+
+    def chunk_body(carry, xs):
+        C, n, m = carry                       # [B,H,D,D], [B,H,D], [B,H]
+        qc, kc, vc, igc, lfc = xs             # [B,H,L,D], ..., [B,H,L]
+        igc = igc.astype(jnp.float32)
+        F = jnp.cumsum(lfc, axis=-1)          # [B,H,L] inclusive cumsum of log f
+        # log coefficient of the contribution of step s to step t (s<=t):
+        #   F_t - F_s + i~_s ; stabilizer m_t = max(F_t + m_in, max_s<=t(...))
+        g = F[..., :, None] - F[..., None, :] + igc[..., None, :]   # [B,H,L,L]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        g = jnp.where(tri, g, -jnp.inf)
+        m_local = jnp.max(g, axis=-1)                                # [B,H,L]
+        m_t = jnp.maximum(F + m[..., None], m_local)                 # [B,H,L]
+        w = jnp.exp(g - m_t[..., None])                              # intra weights
+        b = jnp.exp(F + m[..., None] - m_t)                          # inter scale
+
+        qk = jnp.einsum("bhtd,bhsd->bhts", qc.astype(jnp.float32),
+                        kc.astype(jnp.float32)) * scale
+        intra_num = jnp.einsum("bhts,bhsd->bhtd", w * qk, vc.astype(jnp.float32))
+        inter_num = jnp.einsum("bhtd,bhde->bhte", qc.astype(jnp.float32) * scale,
+                               C) * b[..., None]
+        num = intra_num + inter_num
+        intra_den = jnp.einsum("bhts,bhs->bht", w * qk, jnp.ones_like(F))
+        # denominator uses n_t . q_t:
+        n_dot_q = jnp.einsum("bhts,bhsd,bhtd->bht", w,
+                             kc.astype(jnp.float32), qc.astype(jnp.float32)) * scale \
+            + b * jnp.einsum("bhd,bhtd->bht", n, qc.astype(jnp.float32)) * scale
+        del intra_den
+        den = jnp.maximum(jnp.abs(n_dot_q), jnp.exp(-m_t))
+        h = num / den[..., None]                                     # [B,H,L,D]
+
+        # ---- state to end of chunk ----
+        FL = F[..., -1:]                                             # [B,H,1]
+        g_end = FL - F + igc                                         # [B,H,L]
+        m_end = jnp.maximum(FL[..., 0] + m, jnp.max(g_end, axis=-1))
+        w_end = jnp.exp(g_end - m_end[..., None])                    # [B,H,L]
+        decay = jnp.exp(FL[..., 0] + m - m_end)                      # [B,H]
+        C_new = C * decay[..., None, None] + jnp.einsum(
+            "bhs,bhsd,bhse->bhde", w_end, kc.astype(jnp.float32),
+            vc.astype(jnp.float32))
+        n_new = n * decay[..., None] + jnp.einsum(
+            "bhs,bhsd->bhd", w_end, kc.astype(jnp.float32))
+        return (C_new, n_new, m_end), h
+
+    (C, n, m), hs = jax.lax.scan(chunk_body, state, (q, k, v, ig, lf))
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(B, S, H, D)
+    return h, (C, n, m)
+
+
+def mlstm_decode(q, k, v, i_pre, f_pre, state):
+    """Exact single-step recurrence. q,k,v: [B,H,D]; gates [B,H]."""
+    C, n, m = state
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    ig = i_pre.astype(jnp.float32)
+    m_new = jnp.maximum(lf + m, ig)
+    fp = jnp.exp(lf + m - m_new)
+    ip = jnp.exp(ig - m_new)
+    C = C * fp[..., None, None] + ip[..., None, None] * (k[..., :, None] * v[..., None, :])
+    n = n * fp[..., None] + ip[..., None] * k
+    scale = q.shape[-1] ** -0.5
+    num = jnp.einsum("bhde,bhd->bhe", C, q) * scale
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)) * scale,
+                      jnp.exp(-m_new))
+    return num / den[..., None], (C, n, m_new)
+
+
+def mlstm_block_apply(p, x, cfg: LMConfig, state=None, chunk: int = 256,
+                      decode: bool = False):
+    """Pre-up-projection mLSTM block.  x [B,S,Dm] (S=1 when decode).
+
+    ``state`` is (C, n, m, conv_buf): the matrix memory plus the causal-conv
+    ring buffer (last 4 ``up`` activations) so decode matches training.
+    """
+    d = dims(cfg)
+    cdt = cfg.compute_dtype
+    B, S, _ = x.shape
+    y = rms_norm(x, p["norm"], cfg.norm_eps)
+    up = y @ p["w_up"].astype(cdt)              # [B,S,inner]
+    gate = y @ p["w_gate"].astype(cdt)
+    if state is None:
+        state = _init_mlstm_state(cfg, B)
+    C0, n0, m0, conv_buf = state
+    if decode:
+        conv_buf = jnp.concatenate([conv_buf[:, 1:], up.astype(jnp.float32)], axis=1)
+        # conv in compute dtype, matching the training path exactly (a f32
+        # decode conv vs bf16 training conv diverges ~1e-1 in the logits
+        # once amplified through the exponential gates)
+        c = jnp.einsum("btc,tc->bc", conv_buf.astype(cdt),
+                       p["conv"].astype(cdt))[:, None]
+    else:
+        c = _causal_conv4(up, p["conv"].astype(cdt))
+        tail = up[:, -4:].astype(jnp.float32)
+        pad = jnp.zeros((B, max(0, 4 - S), up.shape[-1]), jnp.float32)
+        conv_buf = jnp.concatenate([conv_buf[:, S:], pad, tail], axis=1)[:, -4:]
+    c = jax.nn.silu(c)
+    q = (c @ p["w_q"].astype(cdt)).reshape(B, S, d.n_heads, d.head_dim)
+    k = (c @ p["w_k"].astype(cdt)).reshape(B, S, d.n_heads, d.head_dim)
+    v = (up @ p["w_v"].astype(cdt)).reshape(B, S, d.n_heads, d.head_dim)
+    gates = (c @ p["w_if"].astype(cdt)).reshape(B, S, 2, d.n_heads)
+    i_pre, f_pre = gates[:, :, 0], gates[:, :, 1]
+
+    cell_state = (C0, n0, m0)
+    if decode:
+        h, cell_state = mlstm_decode(q[:, 0], k[:, 0], v[:, 0],
+                                     i_pre[:, 0], f_pre[:, 0], cell_state)
+        h = h[:, None]
+    else:
+        ch = min(chunk, S)
+        h, cell_state = mlstm_chunkwise(q, k, v, i_pre, f_pre, cell_state, ch)
+    h = h.reshape(B, S, d.inner).astype(cdt)
+    h = rms_norm(h, p["out_norm"], cfg.norm_eps)
+    out = (h * jax.nn.silu(gate)) @ p["w_down"].astype(cdt)
+    return x + out, cell_state + (conv_buf,)
+
+
+def _init_mlstm_state(cfg: LMConfig, batch: int):
+    d = dims(cfg)
+    return (jnp.zeros((batch, d.n_heads, d.head_dim, d.head_dim), jnp.float32),
+            jnp.zeros((batch, d.n_heads, d.head_dim), jnp.float32),
+            jnp.zeros((batch, d.n_heads), jnp.float32),
+            jnp.zeros((batch, 4, d.inner), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM cell (scalar, sequential)
+# ---------------------------------------------------------------------------
+
+def init_slstm_block(key, cfg: LMConfig) -> dict:
+    d = dims(cfg)
+    ks = jax.random.split(key, 7)
+    pd = cfg.param_dtype
+    hd = cfg.d_model // cfg.n_heads
+    return {
+        "norm": jnp.zeros((cfg.d_model,), pd),
+        "w_in": dense_init(ks[0], cfg.d_model, 4 * cfg.d_model, pd),  # z,i,f,o
+        "r": (jax.random.normal(ks[1], (cfg.n_heads, 4, hd, hd), jnp.float32)
+              / jnp.sqrt(hd)).astype(pd),
+        "ffn_norm": jnp.zeros((cfg.d_model,), pd),
+        "w_ff_gate": dense_init(ks[2], cfg.d_model, d.ffn, pd),
+        "w_ff_up": dense_init(ks[3], cfg.d_model, d.ffn, pd),
+        "w_ff_down": dense_init(ks[4], d.ffn, cfg.d_model, pd),
+    }
+
+
+def slstm_step(p, xt, state, cfg: LMConfig):
+    """One sLSTM step.  xt [B, 4*Dm] preactivations; state (h,c,n,m) [B,Dm]."""
+    h, c, n, m = state
+    B = xt.shape[0]
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    # recurrent contribution, block-diagonal per head
+    hr = h.reshape(B, H, hd)
+    rec = jnp.einsum("bhd,hgde->bhge", hr.astype(jnp.float32),
+                     p["r"].astype(jnp.float32))  # [B,H,4,hd]
+    pre = xt.astype(jnp.float32).reshape(B, 4, H, hd) + rec.transpose(0, 2, 1, 3)
+    z = jnp.tanh(pre[:, 0].reshape(B, -1))
+    i_pre = pre[:, 1].reshape(B, -1)
+    f_pre = pre[:, 2].reshape(B, -1)
+    o = jax.nn.sigmoid(pre[:, 3].reshape(B, -1))
+    lf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(lf + m, i_pre)
+    fp = jnp.exp(lf + m - m_new)
+    ip = jnp.exp(i_pre - m_new)
+    c_new = fp * c + ip * z
+    n_new = fp * n + ip
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_block_apply(p, x, cfg: LMConfig, state=None, decode: bool = False):
+    """x [B,S,Dm].  Sequential scan over time (the sLSTM has true recurrence)."""
+    B, S, Dm = x.shape
+    cdt = cfg.compute_dtype
+    y = rms_norm(x, p["norm"], cfg.norm_eps)
+    pre = y @ p["w_in"].astype(cdt)     # [B,S,4Dm]
+    if state is None:
+        z = lambda: jnp.zeros((B, Dm), jnp.float32)
+        state = (z(), z(), z(), z())
+
+    if decode:
+        state = slstm_step(p, pre[:, 0], state, cfg)
+        h = state[0][:, None]
+    else:
+        def body(st, xt):
+            st = slstm_step(p, xt, st, cfg)
+            return st, st[0]
+        state, hs = jax.lax.scan(body, state, pre.transpose(1, 0, 2))
+        h = hs.transpose(1, 0, 2)
+    x = x + h.astype(cdt)
+    # gated FFN (post-up-projection block)
+    y = rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+    f = jax.nn.silu(y @ p["w_ff_gate"].astype(cdt)) * (y @ p["w_ff_up"].astype(cdt))
+    return x + f @ p["w_ff_down"].astype(cdt), state
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: LMConfig) -> dict:
+    n_groups = cfg.n_layers // LAYERS_PER_GROUP
+    assert n_groups * LAYERS_PER_GROUP == cfg.n_layers, \
+        f"xlstm n_layers must be a multiple of {LAYERS_PER_GROUP}"
+    k_emb, k_m, k_s, k_out = jax.random.split(key, 4)
+    mkeys = jax.random.split(k_m, n_groups * MLSTM_PER_GROUP).reshape(
+        n_groups, MLSTM_PER_GROUP, 2)
+    skeys = jax.random.split(k_s, n_groups)
+    mlstm = jax.vmap(jax.vmap(lambda k: init_mlstm_block(k, cfg)))(mkeys)
+    slstm = jax.vmap(lambda k: init_slstm_block(k, cfg))(skeys)
+    return {
+        "embed": {"tok": embed_init(k_emb, cfg.vocab, cfg.d_model, cfg.param_dtype)},
+        "mlstm": mlstm,          # [G, 7, ...]
+        "slstm": slstm,          # [G, ...]
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+        "unembed": dense_init(k_out, cfg.d_model, cfg.vocab, cfg.param_dtype),
+    }
+
+
+def _stack_forward(params, x, cfg: LMConfig, states=None, decode: bool = False,
+                   chunk: int | None = None):
+    """Scan over groups of (7 mLSTM + 1 sLSTM).  states: pytree with leading
+    [G] dims or None."""
+    d = dims(cfg)
+    B = x.shape[0]
+    chunk = chunk if chunk is not None else cfg.mlstm_chunk
+    n_groups = cfg.n_layers // LAYERS_PER_GROUP
+    if states is None:
+        states = init_states(cfg, B)
+
+    def group_body(x, xs):
+        mp, sp, mstate, sstate = xs
+
+        def m_body(x, xs2):
+            mp_l, st = xs2
+            x, new_st = mlstm_block_apply(mp_l, x, cfg, state=st, chunk=chunk,
+                                          decode=decode)
+            return constrain_batch(x), new_st
+
+        x, new_mstates = jax.lax.scan(m_body, x, (mp, mstate))
+        x, new_sstate = slstm_block_apply(sp, x, cfg, state=sstate, decode=decode)
+        return constrain_batch(x), (new_mstates, new_sstate)
+
+    body = jax.checkpoint(group_body) if (cfg.remat and not decode) else group_body
+    x, new_states = jax.lax.scan(
+        body, x, (params["mlstm"], params["slstm"],
+                  states["mlstm"], states["slstm"]))
+    return x, {"mlstm": new_states[0], "slstm": new_states[1]}
+
+
+def init_states(cfg: LMConfig, batch: int) -> dict:
+    d = dims(cfg)
+    G = cfg.n_layers // LAYERS_PER_GROUP
+    B = batch
+    return {
+        "mlstm": (
+            jnp.zeros((G, MLSTM_PER_GROUP, B, d.n_heads, d.head_dim, d.head_dim),
+                      jnp.float32),
+            jnp.zeros((G, MLSTM_PER_GROUP, B, d.n_heads, d.head_dim), jnp.float32),
+            jnp.zeros((G, MLSTM_PER_GROUP, B, d.n_heads), jnp.float32),
+            jnp.zeros((G, MLSTM_PER_GROUP, B, 4, d.inner), jnp.float32),
+        ),
+        "slstm": tuple(jnp.zeros((G, B, cfg.d_model), jnp.float32)
+                       for _ in range(4)),
+    }
+
+
+def loss_fn(params, batch, cfg: LMConfig):
+    x = params["embed"]["tok"].astype(cfg.compute_dtype)[batch["tokens"]]
+    x, _ = _stack_forward(params, x, cfg)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["unembed"].astype(cfg.compute_dtype)
+    return softmax_xent(logits[:, :-1], batch["tokens"][:, 1:])
+
+
+def prefill(params, batch, cfg: LMConfig, max_len=None):
+    x = params["embed"]["tok"].astype(cfg.compute_dtype)[batch["tokens"]]
+    x, states = _stack_forward(params, x, cfg)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, -1:] @ params["unembed"].astype(cfg.compute_dtype)
+    return logits, states, jnp.full((), x.shape[1], jnp.int32)
+
+
+def decode_step(params, states, tokens, pos, cfg: LMConfig):
+    x = params["embed"]["tok"].astype(cfg.compute_dtype)[tokens[:, None]]
+    x, new_states = _stack_forward(params, x, cfg, states=states, decode=True)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["unembed"].astype(cfg.compute_dtype)
+    return logits, new_states

@@ -1,0 +1,115 @@
+"""Optimizers (pure-JAX, functional; no optax offline).
+
+The paper's recipe: SGD, initial lr 0.25, multiplicative decay 0.99 per round,
+minibatch 50, 5 local epochs.  AdamW is provided for the LM architectures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]  # (grads, state, params)
+
+
+def sgd(lr: float | Callable[[jnp.ndarray], jnp.ndarray], momentum: float = 0.0,
+        nesterov: bool = False) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        state = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            state["mu"] = jax.tree.map(jnp.zeros_like, params)
+        return state
+
+    def update(grads, state, params):
+        step = state["step"]
+        lr_t = lr_fn(step)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+            upd = jax.tree.map(lambda m, g: momentum * m + g, mu, grads) if nesterov else mu
+            new_state = {"step": step + 1, "mu": mu}
+        else:
+            upd = grads
+            new_state = {"step": step + 1}
+        new_params = jax.tree.map(lambda p, u: p - lr_t * u, params, upd)
+        return new_params, new_state
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float | Callable, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def exponential_decay(init_lr: float, decay: float) -> Callable:
+    """Paper schedule: lr_r = init_lr * decay^r (per round)."""
+    def fn(step):
+        return init_lr * jnp.power(decay, step.astype(jnp.float32))
+    return fn
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.0) -> Callable:
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak_lr - floor) * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return fn
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "sgd"
+    lr: float = 0.25
+    lr_decay: float = 0.99
+    momentum: float = 0.0
+    weight_decay: float = 0.0
+    b1: float = 0.9
+    b2: float = 0.95
+
+    def build(self) -> Optimizer:
+        if self.name == "sgd":
+            sched = exponential_decay(self.lr, self.lr_decay) if self.lr_decay else self.lr
+            return sgd(sched, momentum=self.momentum)
+        if self.name == "adamw":
+            return adamw(self.lr, b1=self.b1, b2=self.b2,
+                         weight_decay=self.weight_decay)
+        raise ValueError(f"unknown optimizer {self.name}")

@@ -1,0 +1,125 @@
+"""Resource fluctuation model (paper Eqs. (8)-(11)).
+
+Each client's throughput and computational capability are re-sampled every
+round from a truncated normal distribution with
+
+    mu = mean, sigma^2 = mean^eta, a = mean - sigma, b = mean + sigma.
+
+``eta < 2`` controls the fluctuation amount: eta -> 2 means sigma -> mean,
+i.e. wildly fluctuating resources; eta -> -inf means (near) deterministic.
+
+Model update / upload times follow Eqs. (10)-(11):
+    t_UD = D_k / gamma_tmp        (seconds)
+    t_UL = M / theta_tmp          (M = model bits, theta in bit/s)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import numpy as np
+
+from repro.sim.network import NetworkEnv
+
+SQRT2 = math.sqrt(2.0)
+
+
+def _phi(x: np.ndarray) -> np.ndarray:
+    """Standard normal CDF via erf (no scipy in this environment)."""
+    try:  # vectorized erf: numpy>=2.0 has np.special? fall back to math via vectorize
+        from numpy import vectorize
+        return 0.5 * (1.0 + _ERF(np.asarray(x, dtype=np.float64)))
+    except Exception:  # pragma: no cover
+        raise
+
+
+# Vectorized erf built once. math.erf is exact; vectorize is fine at K<=1e6.
+_ERF = np.vectorize(math.erf, otypes=[np.float64])
+
+
+def _phi_inv(p: np.ndarray) -> np.ndarray:
+    """Inverse standard normal CDF (Acklam's rational approximation).
+
+    Max abs error ~1.15e-9 over (0,1): far below the fluctuation scale here.
+    """
+    p = np.asarray(p, dtype=np.float64)
+    a = [-3.969683028665376e+01, 2.209460984245205e+02, -2.759285104469687e+02,
+         1.383577518672690e+02, -3.066479806614716e+01, 2.506628277459239e+00]
+    b = [-5.447609879822406e+01, 1.615858368580409e+02, -1.556989798598866e+02,
+         6.680131188771972e+01, -1.328068155288572e+01]
+    c = [-7.784894002430293e-03, -3.223964580411365e-01, -2.400758277161838e+00,
+         -2.549732539343734e+00, 4.374664141464968e+00, 2.938163982698783e+00]
+    d = [7.784695709041462e-03, 3.224671290700398e-01, 2.445134137142996e+00,
+         3.754408661907416e+00]
+    plow, phigh = 0.02425, 1 - 0.02425
+    x = np.empty_like(p)
+
+    lo = p < plow
+    hi = p > phigh
+    mid = ~(lo | hi)
+
+    if np.any(lo):
+        q = np.sqrt(-2 * np.log(p[lo]))
+        x[lo] = (((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4]) * q + c[5]) / \
+                ((((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1)
+    if np.any(hi):
+        q = np.sqrt(-2 * np.log(1 - p[hi]))
+        x[hi] = -(((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4]) * q + c[5]) / \
+                 ((((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1)
+    if np.any(mid):
+        q = p[mid] - 0.5
+        r = q * q
+        x[mid] = (((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r + a[4]) * r + a[5]) * q / \
+                 (((((b[0] * r + b[1]) * r + b[2]) * r + b[3]) * r + b[4]) * r + 1)
+    return x
+
+
+def sample_truncated_normal(
+    mean: np.ndarray, eta: float, rng: np.random.Generator
+) -> np.ndarray:
+    """Paper Eq. (8): truncated N(mu=mean, sigma^2=mean^eta) on [mean-sigma, mean+sigma].
+
+    Inverse-CDF sampling: x = mu + sigma * Phi^-1(Phi(alpha) + u (Phi(beta)-Phi(alpha)))
+    with alpha=(a-mu)/sigma=-1, beta=(b-mu)/sigma=+1.
+    """
+    mean = np.asarray(mean, dtype=np.float64)
+    sigma = np.sqrt(np.power(np.maximum(mean, 1e-12), eta))
+    # alpha = -1, beta = +1 always (a = mu - sigma, b = mu + sigma)
+    p_lo = _phi(np.array(-1.0))
+    p_hi = _phi(np.array(1.0))
+    u = rng.uniform(size=mean.shape)
+    z = _phi_inv(p_lo + u * (p_hi - p_lo))
+    out = mean + sigma * z
+    # numerical safety: clip exactly into [a, b] and keep strictly positive
+    return np.clip(out, np.maximum(mean - sigma, 1e-9), mean + sigma)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResourceModel:
+    """Round-wise sampler of (t_UD, t_UL) for every client."""
+
+    env: NetworkEnv
+    eta: float
+    model_bits: float           # M in bits (paper: 18.3 MB * 8e6)
+    fluctuate: bool = True      # False => eta ignored, deterministic means
+
+    def sample_times(self, rng: np.random.Generator) -> tuple[np.ndarray, np.ndarray]:
+        """Returns (t_UD [K], t_UL [K]) in seconds for this round."""
+        if self.fluctuate:
+            theta = sample_truncated_normal(self.env.mean_throughput_bps, self.eta, rng)
+            gamma = sample_truncated_normal(self.env.mean_capability, self.eta, rng)
+        else:
+            theta = self.env.mean_throughput_bps
+            gamma = self.env.mean_capability
+        t_ud = self.env.n_samples / np.maximum(gamma, 1e-9)
+        t_ul = self.model_bits / np.maximum(theta, 1e-9)
+        return t_ud, t_ul
+
+    def mean_times(self) -> tuple[np.ndarray, np.ndarray]:
+        t_ud = self.env.n_samples / self.env.mean_capability
+        t_ul = self.model_bits / self.env.mean_throughput_bps
+        return t_ud, t_ul
+
+
+PAPER_MODEL_BYTES = 18.3e6          # 4.6M params fp32 ~= 18.3 MB
+PAPER_MODEL_BITS = PAPER_MODEL_BYTES * 8

@@ -1,0 +1,62 @@
+"""Pytree arithmetic helpers (no optax in this environment)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y"""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_dot(a, b):
+    leaves = jax.tree.leaves(jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b))
+    return sum(leaves)
+
+
+def global_norm(a):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(a)))
+
+
+def tree_weighted_sum(trees, weights):
+    """sum_i w_i * tree_i  (the FedAvg primitive)."""
+    w = jnp.asarray(weights)
+
+    def comb(*leaves):
+        acc = leaves[0] * w[0]
+        for i in range(1, len(leaves)):
+            acc = acc + leaves[i] * w[i]
+        return acc
+
+    return jax.tree.map(comb, *trees)
+
+
+def tree_bytes(a) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(a))
+
+
+def tree_param_count(a) -> int:
+    return sum(x.size for x in jax.tree.leaves(a))
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, a)

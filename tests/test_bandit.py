@@ -1,0 +1,160 @@
+"""Unit + property tests for the paper's core: Eq. (1) round-time math,
+Algorithm 1, the UCB policies, and numpy/jax agreement."""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import bandit_jax
+from repro.core.bandit import (ClientStats, ElementwiseMabCS, FedCS,
+                               NaiveMabCS, estimate_round_time, greedy_select,
+                               make_policy, t_inc, true_round_time)
+
+
+# ---------------------------------------------------------------------------
+# Eq. (1) / schedule math
+# ---------------------------------------------------------------------------
+
+def test_t_inc_first_client():
+    # empty set: T_inc = t_UL (distribution) + t_UD + t_UL
+    assert t_inc(0.0, 0.0, 3.0, 5.0) == pytest.approx(5.0 + 3.0 + 5.0)
+
+
+def test_true_round_time_matches_hand_schedule():
+    # two clients: T_d = max UL = 4; c0: starts at Td, compute 2 -> upload
+    # [6, 9]; c1: compute ready 5+4=9 > 9 -> upload [9, 13]
+    t_ud = np.array([2.0, 5.0])
+    t_ul = np.array([3.0, 4.0])
+    got = true_round_time([0, 1], t_ud, t_ul)
+    assert got == pytest.approx(13.0)
+
+
+@given(st.lists(st.tuples(st.floats(0.1, 100), st.floats(0.1, 100)),
+                min_size=1, max_size=8))
+@settings(max_examples=200, deadline=None)
+def test_round_time_properties(times):
+    t_ud = np.array([a for a, _ in times])
+    t_ul = np.array([b for _, b in times])
+    order = list(range(len(times)))
+    rt = true_round_time(order, t_ud, t_ul)
+    # lower bounds: distribution + any client's own compute+upload
+    t_d = t_ul.max()
+    assert rt >= t_d + max(t_ud[k] + t_ul[k] for k in order) - 1e-9
+    # upper bound: everything serialized
+    assert rt <= t_d + t_ud.max() + t_ul.sum() + 1e-9
+    # estimator within bounds too and monotone in set growth
+    est = estimate_round_time(order, t_ud, t_ul)
+    assert est >= 0
+    if len(order) > 1:
+        assert estimate_round_time(order[:-1], t_ud, t_ul) <= est + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 10), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=100, deadline=None)
+def test_greedy_select_invariants(s_round, seed):
+    rng = np.random.default_rng(seed)
+    k = 10
+    cands = np.arange(k)
+    est_ud = rng.uniform(0.1, 50, k)
+    est_ul = rng.uniform(0.1, 50, k)
+    sel = greedy_select(cands, s_round, est_ud, est_ul)
+    assert len(sel) == min(s_round, k)
+    assert len(set(sel)) == len(sel)                 # no duplicates
+    assert all(s in cands for s in sel)
+
+
+def test_greedy_prefers_fast_clients():
+    est_ud = np.array([1.0, 100.0, 1.0, 100.0])
+    est_ul = np.array([1.0, 100.0, 1.0, 100.0])
+    sel = greedy_select(np.arange(4), 2, est_ud, est_ul)
+    assert set(sel) == {0, 2}
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+
+def _stats_with(n_clients, n_sel, mean_ud, mean_ul):
+    st_ = ClientStats.create(n_clients)
+    for k in range(n_clients):
+        for _ in range(n_sel[k]):
+            st_.observe(k, mean_ud[k], mean_ul[k], mean_ud[k] + 2 * mean_ul[k])
+    return st_
+
+
+def test_fedcs_prefers_never_selected():
+    """Paper rule: first-timers report 0 s and look infinitely fast."""
+    st_ = _stats_with(4, [3, 3, 0, 3], [50.0] * 4, [50.0] * 4)
+    pol = FedCS(4, 1)
+    sel = pol.select(st_, np.arange(4), np.random.default_rng(0))
+    assert sel == [2]
+
+
+def test_ucb_explores_unseen_first():
+    st_ = _stats_with(4, [5, 5, 0, 5], [1.0] * 4, [1.0] * 4)
+    for pol in (NaiveMabCS(4, 1), ElementwiseMabCS(4, 1)):
+        sel = pol.select(st_, np.arange(4), np.random.default_rng(0))
+        assert sel == [2], pol.name
+
+
+def test_elementwise_exploits_fast_clients_when_all_seen():
+    mean_ud = [5.0, 50.0, 5.0, 50.0]
+    mean_ul = [5.0, 50.0, 5.0, 50.0]
+    st_ = _stats_with(4, [10] * 4, mean_ud, mean_ul)
+    pol = ElementwiseMabCS(4, 2)
+    sel = pol.select(st_, np.arange(4), np.random.default_rng(0))
+    assert set(sel) == {0, 2}
+
+
+def test_policy_registry():
+    for name in ["fedcs", "extended_fedcs", "naive_ucb", "elementwise_ucb",
+                 "random", "oracle"]:
+        assert make_policy(name, 10, 5).name == name
+    with pytest.raises(ValueError):
+        make_policy("nope", 10, 5)
+
+
+# ---------------------------------------------------------------------------
+# numpy <-> jax agreement
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_jax_elementwise_matches_numpy(seed):
+    rng = np.random.default_rng(seed)
+    k, s_round = 20, 5
+    n_sel = rng.integers(1, 10, k)        # all seen (avoid BIG-vs-inf ties)
+    mean_ud = rng.uniform(1, 100, k)
+    mean_ul = rng.uniform(1, 100, k)
+    st_np = _stats_with(k, n_sel, mean_ud, mean_ul)
+    pol = ElementwiseMabCS(k, s_round)
+    cands = rng.choice(k, size=10, replace=False)
+    want = pol.select(st_np, cands, rng)
+
+    state = bandit_jax.BanditState(
+        n_sel=jnp.asarray(st_np.n_sel, jnp.int32),
+        sum_ud=jnp.asarray(st_np.sum_ud, jnp.float32),
+        sum_ul=jnp.asarray(st_np.sum_ul, jnp.float32),
+        sum_tinc=jnp.asarray(st_np.sum_tinc, jnp.float32),
+        total=jnp.asarray(st_np.total_sel, jnp.int32),
+    )
+    got = bandit_jax.select_elementwise(state, jnp.asarray(cands, jnp.int32),
+                                        s_round=s_round)
+    assert [int(x) for x in got] == want
+
+
+def test_jax_observe_accumulates():
+    state = bandit_jax.BanditState.create(8)
+    state = bandit_jax.observe(state, jnp.asarray([1, 3]),
+                               jnp.asarray([2.0, 4.0]),
+                               jnp.asarray([1.0, 1.0]),
+                               jnp.asarray([5.0, 9.0]))
+    assert int(state.n_sel[1]) == 1 and int(state.n_sel[3]) == 1
+    assert int(state.total) == 2
+    assert float(state.sum_ud[3]) == 4.0

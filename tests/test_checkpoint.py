@@ -1,0 +1,93 @@
+"""Checkpoint/restart: roundtrip fidelity, atomicity, retention, and the
+bandit-state survival that FL fault tolerance depends on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import (CheckpointManager, bandit_state_tree,
+                                   restore_bandit_state)
+from repro.core.bandit import ClientStats
+
+
+@pytest.fixture
+def state():
+    return {
+        "params": {"w": jnp.arange(12.0).reshape(3, 4),
+                   "b": jnp.ones(4, jnp.bfloat16)},
+        "opt": {"step": jnp.asarray(7), "m": {"w": jnp.zeros((3, 4))}},
+        "rng": np.asarray([12345, 678], np.uint64),
+    }
+
+
+def _trees_equal(a, b):
+    fa, fb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(fa, fb))
+
+
+def test_roundtrip(tmp_path, state):
+    mgr = CheckpointManager(tmp_path)
+    state["rng"] = np.asarray(state["rng"])
+    mgr.save(5, state, metadata={"note": "test"})
+    step, got = mgr.restore()
+    assert step == 5
+    assert _trees_equal(got["params"], state["params"])
+    assert _trees_equal(got["opt"], state["opt"])
+    # dtypes preserved (bf16 survives)
+    assert got["params"]["b"].dtype == jnp.bfloat16
+
+
+def test_retention(tmp_path, state):
+    state["rng"] = np.asarray(state["rng"])
+    mgr = CheckpointManager(tmp_path, keep_last=2, keep_every=10)
+    for s in [1, 5, 10, 11, 12]:
+        mgr.save(s, state)
+    steps = mgr.steps()
+    assert 12 in steps and 11 in steps          # keep_last=2
+    assert 10 in steps                          # keep_every=10 survives
+    assert 1 not in steps and 5 not in steps
+
+
+def test_restore_specific_step(tmp_path, state):
+    state["rng"] = np.asarray(state["rng"])
+    mgr = CheckpointManager(tmp_path, keep_last=5)
+    mgr.save(1, {"params": {"x": jnp.asarray(1.0)}})
+    mgr.save(2, {"params": {"x": jnp.asarray(2.0)}})
+    step, got = mgr.restore(1)
+    assert step == 1 and float(got["params"]["x"]) == 1.0
+
+
+def test_no_partial_checkpoints(tmp_path, state):
+    """A temp dir must never be listed as a checkpoint."""
+    state["rng"] = np.asarray(state["rng"])
+    mgr = CheckpointManager(tmp_path)
+    (tmp_path / ".tmp_ckpt_00000099").mkdir()
+    mgr.save(1, state)
+    assert mgr.steps() == [1]
+
+
+def test_missing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        CheckpointManager(tmp_path).restore()
+
+
+def test_bandit_state_survives(tmp_path):
+    stats = ClientStats.create(10)
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        k = int(rng.integers(0, 10))
+        stats.observe(k, rng.uniform(1, 10), rng.uniform(1, 10),
+                      rng.uniform(1, 30))
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(3, {"bandit": bandit_state_tree(stats)})
+    _, got = mgr.restore()
+
+    fresh = ClientStats.create(10)
+    restore_bandit_state(fresh, got["bandit"])
+    assert fresh.total_sel == stats.total_sel
+    np.testing.assert_array_equal(fresh.n_sel, stats.n_sel)
+    np.testing.assert_allclose(fresh.hist_ud, stats.hist_ud)
+    # restored bandit produces identical UCB bonuses => identical policy
+    np.testing.assert_allclose(fresh.ucb_bonus(), stats.ucb_bonus())

@@ -1,0 +1,73 @@
+"""Property tests for upload compression (int8 / top-k with error feedback)."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.distributed import compression as C
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.01, 100.0))
+@settings(max_examples=50, deadline=None)
+def test_int8_bounded_error(seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(512) * scale, jnp.float32)
+    y = C.int8_roundtrip(x)
+    # error bounded by half a quantization step
+    step = float(jnp.max(jnp.abs(x))) / 127.0
+    assert float(jnp.max(jnp.abs(x - y))) <= step * 0.5 + 1e-6
+
+
+def test_int8_zero_preserved():
+    x = jnp.zeros(16, jnp.float32)
+    assert float(jnp.max(jnp.abs(C.int8_roundtrip(x)))) == 0.0
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_topk_keeps_largest(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(256), jnp.float32)
+    approx, err = C.topk_roundtrip(x, ratio=0.1)
+    k = int(256 * 0.1)
+    kept = jnp.sum(approx != 0)
+    assert int(kept) <= k
+    # the largest-magnitude element is always kept
+    i = int(jnp.argmax(jnp.abs(x)))
+    assert float(approx[i]) == pytest.approx(float(x[i]))
+    # identity: approx + err == x
+    np.testing.assert_allclose(np.asarray(approx + err), np.asarray(x),
+                               rtol=1e-6)
+
+
+def test_error_feedback_converges():
+    """DGC property: with error feedback, the time-average of transmitted
+    approximations converges to the true (repeated) delta, and the carried
+    error stays bounded."""
+    rng = np.random.default_rng(0)
+    x = {"w": jnp.asarray(rng.standard_normal(128), jnp.float32)}
+    err = None
+    acc = jnp.zeros(128)
+    T = 60
+    for _ in range(T):
+        approx, err = C.tree_topk_roundtrip(x, ratio=0.1, error_state=err)
+        acc = acc + approx["w"]
+    mean_rel_err = float(jnp.linalg.norm(acc / T - x["w"]) /
+                         jnp.linalg.norm(x["w"]))
+    assert mean_rel_err < 0.2
+    # error feedback stays bounded (does not blow up)
+    assert float(jnp.linalg.norm(err["w"])) < 20 * float(
+        jnp.linalg.norm(x["w"]))
+
+
+def test_compression_bytes():
+    tree = {"a": jnp.zeros((100, 100)), "b": jnp.zeros(77)}
+    n = 100 * 100 + 77
+    assert C.compression_bytes(tree, "none") == 4 * n
+    assert C.compression_bytes(tree, "int8") == n + 8
+    assert C.compression_bytes(tree, "topk", 0.01) == 8 * (100 + 1)
+    with pytest.raises(ValueError):
+        C.compression_bytes(tree, "zip")

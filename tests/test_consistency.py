@@ -1,0 +1,130 @@
+"""System-level invariants across model families (hypothesis + direct):
+
+* causality — logits at position t never depend on tokens > t;
+* prefill/decode consistency — stepwise decode with the cache reproduces
+  the full-sequence forward logits (catches cache/RoPE/mask bugs);
+* FedAvg algebra — aggregation of identical models is identity; weights
+  are permutation-equivariant.
+"""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.models.registry import build
+
+CAUSAL_ARCHS = ["smollm-135m", "qwen3-1.7b", "xlstm-1.3b",
+                "recurrentgemma-9b", "phi3.5-moe-42b-a6.6b"]
+B, S = 2, 16
+
+
+def _fwd_logits(api, params, tokens):
+    """Full-sequence logits via prefill (cache ignored)."""
+    if api.cfg.family in ("dense", "moe", "vlm"):
+        from repro.models import transformer
+        logits, _ = transformer.forward(params, {"tokens": tokens}, api.cfg)
+        return logits
+    if api.cfg.family == "xlstm":
+        from repro.models import xlstm
+        x = params["embed"]["tok"].astype(api.cfg.compute_dtype)[tokens]
+        x, _ = xlstm._stack_forward(params, x, api.cfg)
+        from repro.models.layers import rms_norm
+        x = rms_norm(x, params["final_norm"], api.cfg.norm_eps)
+        return x @ params["unembed"].astype(api.cfg.compute_dtype)
+    if api.cfg.family == "griffin":
+        from repro.models import griffin
+        from repro.models.layers import rms_norm
+        x = params["embed"]["tok"].astype(api.cfg.compute_dtype)[tokens]
+        states = griffin.init_states(api.cfg, tokens.shape[0])
+        x, _ = griffin._stack_forward(params, x, api.cfg, states,
+                                      jnp.arange(tokens.shape[1]))
+        x = rms_norm(x, params["final_norm"], api.cfg.norm_eps)
+        return x @ params["embed"]["tok"].astype(api.cfg.compute_dtype).T
+    raise ValueError(api.cfg.family)
+
+
+@pytest.mark.parametrize("arch", CAUSAL_ARCHS)
+def test_causality(arch):
+    """Perturbing token t+1.. must not change logits at positions <= t."""
+    api = build(arch, reduced=True)
+    params = api.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, api.cfg.vocab, (B, S)), jnp.int32)
+    cut = S // 2
+    perturbed = tokens.at[:, cut:].set(
+        jnp.asarray(rng.integers(0, api.cfg.vocab, (B, S - cut)), jnp.int32))
+    la = np.asarray(_fwd_logits(api, params, tokens).astype(jnp.float32))
+    lb = np.asarray(_fwd_logits(api, params, perturbed).astype(jnp.float32))
+    np.testing.assert_allclose(la[:, :cut], lb[:, :cut], rtol=2e-3, atol=2e-3)
+    # sanity: the suffix DID change
+    assert np.abs(la[:, cut:] - lb[:, cut:]).max() > 1e-4
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "xlstm-1.3b",
+                                  "recurrentgemma-9b"])
+def test_prefill_decode_matches_forward(arch):
+    """Stepwise decode logits == full-forward logits at each position.
+
+    Run at fp32 compute so the assertion tests cache/state-handoff LOGIC
+    rather than bf16 accumulation-order noise (which the exponential-gated
+    recurrences amplify to ~1e-1 — verified benign by this very test)."""
+    import dataclasses
+
+    api0 = build(arch, reduced=True)
+    cfg = dataclasses.replace(api0.cfg, compute_dtype=jnp.float32)
+    # rebuild family functions against the f32 config
+    import functools
+    import importlib
+    from repro.models.registry import FAMILY_MODULES
+    fam = importlib.import_module(FAMILY_MODULES[cfg.family])
+    init = functools.partial(fam.init, cfg=cfg)
+    prefill = functools.partial(fam.prefill, cfg=cfg)
+    decode_step = functools.partial(fam.decode_step, cfg=cfg)
+
+    params = init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    prefix_len, steps = 8, 4
+    total = prefix_len + steps
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, total)), jnp.int32)
+
+    api_f32 = dataclasses.replace(api0, cfg=cfg)
+    full = np.asarray(_fwd_logits(api_f32, params, tokens))
+
+    logits, cache, pos = prefill(params, {"tokens": tokens[:, :prefix_len]},
+                                 max_len=total)
+    np.testing.assert_allclose(np.asarray(logits[:, -1]),
+                               full[:, prefix_len - 1], rtol=1e-3, atol=1e-3)
+    for i in range(steps):
+        step_logits, cache = decode_step(params, cache,
+                                         tokens[:, prefix_len + i], pos + i)
+        np.testing.assert_allclose(
+            np.asarray(step_logits[:, 0]), full[:, prefix_len + i],
+            rtol=1e-3, atol=1e-3, err_msg=f"{arch} step {i}")
+
+
+# ---------------------------------------------------------------------------
+# FedAvg algebra (framework level)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 6))
+@settings(max_examples=20, deadline=None)
+def test_fedavg_identity_and_permutation(seed, c):
+    from repro.fl.aggregation import fedavg
+    rng = np.random.default_rng(seed)
+    base = {"w": jnp.asarray(rng.standard_normal((4, 4)), jnp.float32)}
+    # identity: averaging identical models returns the model
+    out = fedavg([base] * c, list(rng.uniform(0.1, 1.0, c)))
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(base["w"]),
+                               rtol=1e-5, atol=1e-6)
+    # permutation equivariance
+    models = [{"w": jnp.asarray(rng.standard_normal((4, 4)), jnp.float32)}
+              for _ in range(c)]
+    w = list(rng.uniform(0.1, 1.0, c))
+    perm = rng.permutation(c)
+    a = fedavg(models, w)
+    b = fedavg([models[i] for i in perm], [w[i] for i in perm])
+    np.testing.assert_allclose(np.asarray(a["w"]), np.asarray(b["w"]),
+                               rtol=1e-5, atol=1e-6)

@@ -1,0 +1,108 @@
+"""Validation of the loop-aware HLO analyzer against ground truth:
+a scan-over-layers model must report the same dot FLOPs as the identical
+model written as an unrolled python loop (where XLA's counting is trivially
+correct), and a hand-computable matmul chain must match exactly."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze
+
+
+def _flops(fn, *args):
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    return analyze(txt)["dot_flops"]
+
+
+def test_exact_single_matmul():
+    a = jax.ShapeDtypeStruct((32, 48), jnp.float32)
+    b = jax.ShapeDtypeStruct((48, 16), jnp.float32)
+    got = _flops(lambda x, y: x @ y, a, b)
+    assert got == 2 * 32 * 48 * 16
+
+
+def test_scan_matches_unrolled():
+    L, B, D = 5, 8, 64
+    ws = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+    x = jax.ShapeDtypeStruct((B, D), jnp.float32)
+
+    def scanned(w, x):
+        def body(c, wl):
+            return jnp.tanh(c @ wl), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    def unrolled(w, x):
+        for i in range(L):
+            x = jnp.tanh(x @ w[i])
+        return x
+
+    f_scan = _flops(scanned, ws, x)
+    f_unroll = _flops(unrolled, ws, x)
+    assert f_scan == pytest.approx(f_unroll, rel=1e-6)
+    assert f_scan == 2 * L * B * D * D
+
+
+def test_grad_of_scan_counts_bwd():
+    L, B, D = 4, 8, 32
+    ws = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+    x = jax.ShapeDtypeStruct((B, D), jnp.float32)
+
+    def loss_scan(w, x):
+        def body(c, wl):
+            return jnp.tanh(c @ wl), None
+        y, _ = jax.lax.scan(body, x, w)
+        return jnp.sum(y ** 2)
+
+    def loss_unrolled(w, x):
+        for i in range(L):
+            x = jnp.tanh(x @ w[i])
+        return jnp.sum(x ** 2)
+
+    g_scan = _flops(jax.grad(loss_scan), ws, x)
+    g_unr = _flops(jax.grad(loss_unrolled), ws, x)
+    # fwd (1) + bwd (2) matmuls per layer = 3x fwd flops.  The unrolled form
+    # legitimately skips layer-0's dx matmul (input grad unused), the scan
+    # form computes it uniformly — allow exactly that one-matmul delta.
+    one_mm = 2 * B * D * D
+    assert g_scan == pytest.approx(3 * 2 * L * B * D * D, rel=1e-6)
+    assert g_scan - one_mm <= g_unr <= g_scan
+
+
+def test_nested_scan_multiplies():
+    n_out, n_in, B, D = 3, 4, 8, 32
+    w = jax.ShapeDtypeStruct((D, D), jnp.float32)
+    x = jax.ShapeDtypeStruct((B, D), jnp.float32)
+
+    def f(w, x):
+        def outer(c, _):
+            def inner(ci, _):
+                return jnp.tanh(ci @ w), None
+            ci, _ = jax.lax.scan(inner, c, None, length=n_in)
+            return ci, None
+        y, _ = jax.lax.scan(outer, x, None, length=n_out)
+        return y
+
+    assert _flops(f, w, x) == 2 * n_out * n_in * B * D * D
+
+
+def test_collective_bytes_loop_scaled():
+    if jax.device_count() < 2:
+        pytest.skip("needs >1 device (run under forced host device count)")
+
+
+def test_traffic_nonzero_and_major_leq_total():
+    a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def f(x):
+        def body(c, _):
+            return jnp.tanh(c @ c), None
+        y, _ = jax.lax.scan(body, x, None, length=3)
+        return y
+
+    txt = jax.jit(f).lower(a).compile().as_text()
+    r = analyze(txt)
+    assert r["traffic_bytes"] > 0
+    assert 0 < r["traffic_major"] <= r["traffic_bytes"]

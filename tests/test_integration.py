@@ -1,0 +1,81 @@
+"""End-to-end integration: the training driver with checkpoint/resume,
+elastic membership, and the LM FL trainer."""
+
+import numpy as np
+import pytest
+
+from repro.core.bandit import make_policy
+from repro.fl.server import FederatedServer, FLConfig
+from repro.launch.train import main as train_main
+from repro.sim.network import make_network_env
+from repro.sim.resources import PAPER_MODEL_BITS, ResourceModel
+
+
+def test_train_driver_time_only(capsys):
+    train_main(["--arch", "none", "--policy", "elementwise_ucb",
+                "--rounds", "10", "--clients", "20"])
+    out = capsys.readouterr().out
+    assert "round    9" in out and "done: 10 rounds" in out
+
+
+def test_train_driver_resume(tmp_path, capsys):
+    args = ["--arch", "none", "--policy", "elementwise_ucb",
+            "--clients", "20", "--ckpt-dir", str(tmp_path),
+            "--ckpt-every", "5"]
+    train_main(args + ["--rounds", "10"])
+    train_main(args + ["--rounds", "15", "--resume"])
+    out = capsys.readouterr().out
+    assert "resumed from round 10" in out
+    assert "done: 5 rounds" in out
+
+
+def test_train_driver_elastic(capsys):
+    train_main(["--arch", "none", "--rounds", "9", "--clients", "10",
+                "--swap-clients", "3"])
+    out = capsys.readouterr().out
+    assert out.count("[elastic]") == 3
+
+
+def test_elastic_arm_reset_reexplored():
+    """A replaced client (fresh arm) must be selected soon after joining —
+    the paper's cold-start rule via the infinite UCB bonus."""
+    n = 10
+    rng = np.random.default_rng(0)
+    env = make_network_env(n, rng)
+    res = ResourceModel(env, eta=1.0, model_bits=PAPER_MODEL_BITS)
+    srv = FederatedServer(FLConfig(n_clients=n, frac_request=1.0, s_round=2,
+                                   seed=0),
+                          make_policy("elementwise_ucb", n, 2), res)
+    srv.run(20)
+    srv.stats.forget(4)
+    before = srv.stats.n_sel[4]
+    assert before == 0
+    srv.run_round(20)          # candidates = all clients (frac 1.0)
+    assert srv.stats.n_sel[4] == 1, "fresh arm not explored immediately"
+
+
+def test_failed_cohorts_still_converge():
+    """With 30% failures, aggregation over survivors keeps training sane."""
+    n = 10
+    rng = np.random.default_rng(1)
+    env = make_network_env(n, rng)
+    res = ResourceModel(env, eta=1.5, model_bits=PAPER_MODEL_BITS)
+    srv = FederatedServer(FLConfig(n_clients=n, frac_request=0.8, s_round=3,
+                                   seed=1),
+                          make_policy("elementwise_ucb", n, 3), res)
+    srv.run(30, failure_prob=0.3)
+    assert len(srv.history) == 30
+    assert srv.failed_rounds < 30          # not every round lost
+
+
+@pytest.mark.slow
+def test_lm_fl_trainer_learns():
+    from repro.fl.lm_trainer import LmFlTrainer
+    tr = LmFlTrainer("smollm-135m", n_clients=4,
+                     n_samples=np.full(4, 100), seed=0,
+                     steps_per_round=30, lr=1.0)
+    means = []
+    for r in range(3):
+        tr.train_round([0, 1, 2, 3])
+        means.append(float(np.mean(tr.last_losses)))
+    assert means[-1] < means[0] - 0.05, means

@@ -1,0 +1,132 @@
+"""Per-kernel allclose sweeps: Pallas (interpret mode) vs ref.py oracles,
+across shapes and dtypes (assignment deliverable c)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def rnd(rng, shape, dtype):
+    x = rng.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(0)
+
+
+# --- ucb_score -------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [100, 4096, 5000, 100_000])
+def test_ucb_scores(rng, k):
+    sums = jnp.asarray(rng.uniform(0, 1000, k), jnp.float32)
+    n_sel = jnp.asarray(rng.integers(0, 50, k), jnp.int32)
+    total = jnp.asarray(int(n_sel.sum()))
+    got = ops.ucb_scores(sums, n_sel, total, interpret=True)
+    want = ref.ucb_scores_ref(sums, n_sel, total)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_ucb_explore_first(rng):
+    sums = jnp.zeros(4096, jnp.float32)
+    n_sel = jnp.zeros(4096, jnp.int32).at[7].set(3)
+    got = ops.ucb_scores(sums, n_sel, jnp.asarray(3), interpret=True)
+    assert float(got[0]) == pytest.approx(1e12)
+    assert float(got[7]) < 1e11
+
+
+# --- fedavg ----------------------------------------------------------------
+
+@pytest.mark.parametrize("c,n", [(2, 8192), (5, 50_000), (10, 8192 * 3 + 17)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fedavg(rng, c, n, dtype):
+    stacked = rnd(rng, (c, n), dtype)
+    w = jnp.asarray(rng.dirichlet(np.ones(c)), jnp.float32)
+    got = ops.fedavg_combine(stacked, w, interpret=True)
+    want = ref.fedavg_ref(stacked, w)
+    rtol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=rtol,
+                               atol=1e-3)
+
+
+def test_fedavg_weighted_mean_invariant(rng):
+    """FedAvg of identical models is the model itself."""
+    x = rnd(rng, (4, 8192), jnp.float32)
+    x = jnp.broadcast_to(x[:1], x.shape)
+    w = jnp.asarray([0.1, 0.2, 0.3, 0.4], jnp.float32)
+    got = ops.fedavg_combine(x, w, interpret=True)
+    np.testing.assert_allclose(got, x[0], rtol=1e-5)
+
+
+# --- flash attention ---------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,kv,g,dh", [
+    (1, 512, 1, 1, 64),
+    (2, 1024, 2, 2, 64),
+    (1, 1024, 4, 1, 128),
+    (2, 512, 1, 4, 128),
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(rng, b, s, kv, g, dh, causal, dtype):
+    q = rnd(rng, (b, s, kv, g, dh), dtype)
+    k = rnd(rng, (b, s, kv, dh), dtype)
+    v = rnd(rng, (b, s, kv, dh), dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, block_q=256,
+                              block_kv=256, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    rtol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=rtol, atol=2e-2 if dtype == jnp.bfloat16
+                               else 1e-5)
+
+
+def test_flash_matches_model_layer_impl(rng):
+    """kernel == models.layers.flash_attention (the in-model blockwise path)."""
+    from repro.models.layers import flash_attention as model_flash
+    q = rnd(rng, (2, 1024, 2, 2, 64), jnp.float32)
+    k = rnd(rng, (2, 1024, 2, 64), jnp.float32)
+    v = rnd(rng, (2, 1024, 2, 64), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=True, interpret=True)
+    want = model_flash(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5,
+                               atol=1e-5)
+
+
+# --- rg_lru ------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,t,w", [(1, 256, 512), (2, 1024, 512),
+                                   (3, 512, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_rg_lru(rng, b, t, w, dtype):
+    a = jnp.asarray(rng.uniform(0.7, 0.999, (b, t, w)), dtype)
+    bb = rnd(rng, (b, t, w), dtype) * 0.1
+    got = ops.rg_lru_scan(a, bb, interpret=True)
+    want = ref.rg_lru_ref(a, bb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_rg_lru_matches_associative_scan(rng):
+    """kernel == the in-model associative_scan formulation."""
+    from repro.models.griffin import rg_lru_scan as model_scan
+    b, t, w = 2, 512, 512
+    x = rnd(rng, (b, t, w), jnp.float32)
+    r = rnd(rng, (b, t, w), jnp.float32)
+    i = rnd(rng, (b, t, w), jnp.float32)
+    lam = jnp.asarray(rng.uniform(0.5, 2.0, (w,)), jnp.float32)
+    want, _ = model_scan(x, r, i, lam)
+    # reproduce (a, b) exactly as the model computes them
+    log_a = -8.0 * jax.nn.softplus(lam) * jax.nn.sigmoid(r)
+    a = jnp.exp(log_a)
+    bb = jnp.sqrt(jnp.maximum(1 - jnp.exp(2 * log_a), 1e-12)) * \
+        jax.nn.sigmoid(i) * x
+    got = ops.rg_lru_scan(a, bb, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5,
+                               atol=2e-5)

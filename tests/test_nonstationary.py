@@ -1,0 +1,46 @@
+"""Non-stationary selection (beyond-paper, the paper's stated future work)."""
+
+import numpy as np
+import pytest
+
+from repro.core.bandit import make_policy
+from repro.core.nonstationary import (DiscountedStats, DriftingResources)
+from repro.fl.server import FederatedServer, FLConfig
+from repro.sim.network import make_network_env
+from repro.sim.resources import PAPER_MODEL_BITS
+
+
+def test_discounted_stats_forget():
+    d = DiscountedStats(4, gamma=0.5)
+    d.observe_round([0], np.asarray([10.0, 0, 0, 0]), np.asarray([4.0, 0, 0, 0]))
+    assert d.n[0] == 1.0
+    for _ in range(6):
+        d.observe_round([1], np.asarray([0, 1.0, 0, 0]), np.asarray([0, 1.0, 0, 0]))
+    # client 0's count decayed by 0.5^6
+    assert d.n[0] == pytest.approx(0.5 ** 6)
+    assert d.n[1] > 1.0
+
+
+def test_drifting_resources_move_and_stay_bounded():
+    env = make_network_env(20, np.random.default_rng(0))
+    res = DriftingResources(env, eta=1.5, model_bits=PAPER_MODEL_BITS,
+                            drift=0.2, seed=0)
+    before = res.theta.copy()
+    for _ in range(50):
+        res.advance()
+    assert not np.allclose(res.theta, before)
+    assert res.theta.max() <= 8.64e6 + 1
+    assert res.gamma_cap.min() >= 5.0 - 1e-9
+
+
+@pytest.mark.parametrize("policy", ["discounted_ucb", "sliding_ucb"])
+def test_nonstationary_policies_run(policy):
+    env = make_network_env(30, np.random.default_rng(0))
+    res = DriftingResources(env, eta=1.5, model_bits=PAPER_MODEL_BITS,
+                            drift=0.05, seed=0)
+    srv = FederatedServer(FLConfig(n_clients=30, frac_request=0.3, seed=0),
+                          make_policy(policy, 30, 5), res)
+    srv.run(25)
+    assert len(srv.history) == 25
+    assert all(len(r.selected) == 5 for r in srv.history)
+    assert srv.elapsed > 0

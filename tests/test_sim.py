@@ -1,0 +1,118 @@
+"""Simulation substrate tests: LTE model calibration against the paper's
+published throughput stats, truncated-normal properties (Eq. 8), and the FL
+server protocol invariants."""
+
+import math
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.bandit import make_policy
+from repro.fl.server import FederatedServer, FLConfig
+from repro.sim.network import (make_network_env, place_clients_uniform_disk,
+                               throughput_bps)
+from repro.sim.resources import (PAPER_MODEL_BITS, ResourceModel,
+                                 sample_truncated_normal)
+
+
+def test_throughput_matches_paper_stats():
+    """Paper: mean 1.4, max 8.6 Mbit/s over the 2-km cell."""
+    rng = np.random.default_rng(0)
+    d = place_clients_uniform_disk(200_000, rng)
+    t = throughput_bps(d) / 1e6
+    assert t.mean() == pytest.approx(1.4, abs=0.05)
+    assert t.max() == pytest.approx(8.64, abs=0.05)
+
+
+@given(st.floats(0.0, 1.99), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=100, deadline=None)
+def test_truncated_normal_bounds(eta, seed):
+    """Samples live in [mu - sigma, mu + sigma] with sigma^2 = mu^eta."""
+    rng = np.random.default_rng(seed)
+    mean = rng.uniform(10, 1e6, size=64)
+    x = sample_truncated_normal(mean, eta, rng)
+    sigma = np.sqrt(mean ** eta)
+    assert np.all(x >= mean - sigma - 1e-6)
+    assert np.all(x <= mean + sigma + 1e-6)
+    assert np.all(x > 0)
+
+
+def test_truncated_normal_is_centered():
+    rng = np.random.default_rng(1)
+    mean = np.full(200_000, 100.0)
+    x = sample_truncated_normal(mean, 1.5, rng)
+    # symmetric truncation at +-1 sigma => sample mean ~= mu
+    assert x.mean() == pytest.approx(100.0, abs=0.2)
+
+
+def test_eta_scales_fluctuation():
+    rng = np.random.default_rng(2)
+    mean = np.full(50_000, 100.0)
+    lo = sample_truncated_normal(mean, 0.5, rng).std()
+    hi = sample_truncated_normal(mean, 1.9, rng).std()
+    assert hi > 3 * lo
+
+
+def test_resource_model_times():
+    rng = np.random.default_rng(3)
+    env = make_network_env(100, rng)
+    res = ResourceModel(env, eta=1.5, model_bits=PAPER_MODEL_BITS)
+    t_ud, t_ul = res.sample_times(rng)
+    assert t_ud.shape == (100,) and t_ul.shape == (100,)
+    assert np.all(t_ud > 0) and np.all(t_ul > 0)
+    # upload of 18.3MB at <= 8.64 Mbit/s takes >= 17 s
+    assert t_ul.min() >= PAPER_MODEL_BITS / 8.64e6 * 0.5
+
+
+# ---------------------------------------------------------------------------
+# FL server protocol
+# ---------------------------------------------------------------------------
+
+def _server(policy="elementwise_ucb", seed=0, **cfg_kw):
+    rng = np.random.default_rng(seed)
+    env = make_network_env(50, rng)
+    res = ResourceModel(env, eta=1.5, model_bits=PAPER_MODEL_BITS)
+    cfg = FLConfig(n_clients=50, seed=seed, **cfg_kw)
+    return FederatedServer(cfg, make_policy(policy, 50, cfg.s_round), res)
+
+
+def test_round_selects_at_most_s_round():
+    srv = _server()
+    for r in range(20):
+        rec = srv.run_round(r)
+        assert len(rec.selected) <= srv.cfg.s_round
+        assert len(set(rec.selected)) == len(rec.selected)
+        assert rec.round_time > 0
+
+
+def test_elapsed_monotone_and_stats_consistent():
+    srv = _server()
+    srv.run(30)
+    el = [r.elapsed for r in srv.history]
+    assert all(b > a for a, b in zip(el, el[1:]))
+    assert srv.stats.total_sel == sum(len(r.selected) for r in srv.history)
+    assert int(srv.stats.n_sel.sum()) == srv.stats.total_sel
+
+
+def test_resource_request_fraction():
+    srv = _server(frac_request=0.2)
+    cands = srv._resource_request()
+    assert len(cands) == math.ceil(50 * 0.2)
+    assert len(np.unique(cands)) == len(cands)
+
+
+def test_failure_rounds_complete():
+    """Node failures: rounds still complete; bandit records a penalty."""
+    srv = _server()
+    srv.run(20, failure_prob=0.5)
+    assert len(srv.history) == 20
+    # observed mean t_UD inflated for failed clients vs their true mean
+    assert srv.stats.total_sel > 0
+
+
+def test_deadline_caps_round_time():
+    srv = _server(deadline_s=100.0)
+    srv.run(10)
+    assert all(r.round_time <= 100.0 for r in srv.history)
