@@ -1,0 +1,84 @@
+"""Sweep-engine speedup: the on-device (jit/vmap/scan) grid sweep vs the
+per-round Python loop it replaces.
+
+Both sides run the identical workload — the acceptance grid of
+6 policies x 3 eta x N_SEEDS seeds x N_ROUNDS rounds at K=100 clients —
+and the derived line records numpy_s / engine_s (steady-state execute; the
+one-time jit compile is reported separately).  tests/test_bandit_jax.py
+asserts the two engines produce the same trajectories; this file asserts
+the speed.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.bandit import make_policy
+from repro.fl.server import FederatedServer, FLConfig
+from repro.sim import engine_jax
+from repro.sim.network import make_network_env
+from repro.sim.resources import PAPER_MODEL_BITS, ResourceModel
+
+POLICIES = ("fedcs", "extended_fedcs", "naive_ucb", "elementwise_ucb",
+            "random", "oracle")
+ETAS = (1.0, 1.5, 1.9)
+N_SEEDS = 8
+N_ROUNDS = 500
+N_CLIENTS = 100
+S_ROUND = 5
+
+
+def _numpy_sweep(policies, etas, n_seeds, n_rounds) -> float:
+    """The python-loop reference sweep; returns wall seconds.  Matches the
+    engine's setup: one client environment (env_seed 0) shared by the whole
+    grid, the per-point seed drives only candidate polls and fluctuation."""
+    env = make_network_env(N_CLIENTS, np.random.default_rng(0))
+    t0 = time.time()
+    for policy in policies:
+        for eta in etas:
+            for seed in range(n_seeds):
+                res = ResourceModel(env, eta=eta, model_bits=PAPER_MODEL_BITS)
+                srv = FederatedServer(
+                    FLConfig(n_clients=N_CLIENTS, s_round=S_ROUND, seed=seed),
+                    make_policy(policy, N_CLIENTS, S_ROUND), res)
+                srv.run(n_rounds)
+    return time.time() - t0
+
+
+def main(fast: bool = False) -> list[str]:
+    etas = ETAS[:2] if fast else ETAS
+    n_seeds = 2 if fast else N_SEEDS
+    n_rounds = 100 if fast else N_ROUNDS
+    grid = len(POLICIES) * len(etas) * n_seeds
+
+    t0 = time.time()
+    engine_jax.sweep(policies=POLICIES, etas=etas, seeds=n_seeds,
+                     n_rounds=n_rounds, n_clients=N_CLIENTS, s_round=S_ROUND)
+    compile_s = time.time() - t0
+    t0 = time.time()
+    res = engine_jax.sweep(policies=POLICIES, etas=etas, seeds=n_seeds,
+                           n_rounds=n_rounds, n_clients=N_CLIENTS,
+                           s_round=S_ROUND)
+    engine_s = time.time() - t0
+
+    numpy_s = _numpy_sweep(POLICIES, etas, n_seeds, n_rounds)
+    speedup = numpy_s / engine_s
+
+    rounds_total = grid * n_rounds
+    out = ["name,us_per_call,derived"]
+    out.append(f"sweep/numpy_loop,{1e6*numpy_s/rounds_total:.1f},"
+               f"total={numpy_s:.2f}s grid={grid} rounds={n_rounds}")
+    out.append(f"sweep/engine_jax,{1e6*engine_s/rounds_total:.1f},"
+               f"total={engine_s:.2f}s compile={compile_s:.2f}s (one jit call)")
+    out.append(f"sweep/speedup,,x{speedup:.1f} (target >= 20x)")
+    # sanity: the sweep output is well-formed
+    assert res.round_times.shape == (len(POLICIES), len(etas), n_seeds,
+                                     n_rounds)
+    return out
+
+
+if __name__ == "__main__":
+    for line in main(fast="--fast" in __import__("sys").argv):
+        print(line)

@@ -41,7 +41,7 @@ def main() -> None:
 
     from benchmarks import (bench_accuracy, bench_convergence, bench_drift,
                             bench_kernels, bench_roofline, bench_scale,
-                            bench_selection)
+                            bench_selection, bench_sweep)
     sections = {
         "fig1_2": bench_selection.main,
         "fig3": bench_accuracy.main,
@@ -50,6 +50,7 @@ def main() -> None:
         "kernels": bench_kernels.main,
         "roofline": bench_roofline.main,
         "scale": bench_scale.main,
+        "sweep": bench_sweep.main,
     }
     if args.only:
         keep = set(args.only.split(","))

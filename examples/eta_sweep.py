@@ -1,22 +1,35 @@
 """Reproduce the shape of paper Figs. 1-2: the MAB selectors lose slightly
 when resources are stable and win increasingly as fluctuation grows.
 
+Runs entirely on-device: the whole (policy x eta x seed) grid is ONE jit
+call through sim.engine_jax (the numpy FederatedServer produces the same
+trajectories round-for-round — see tests/test_bandit_jax.py — only ~30x
+slower on this grid).
+
   PYTHONPATH=src python examples/eta_sweep.py
 """
 
-import numpy as np
+from repro.sim import engine_jax
 
-from benchmarks.bench_selection import POLICIES, run_one
+POLICIES = ("fedcs", "extended_fedcs", "naive_ucb", "elementwise_ucb")
+ETAS = (1.0, 1.5, 1.9, 1.99)
+N_SEEDS = 3
+N_ROUNDS = 200
 
 
 def main() -> None:
+    res = engine_jax.sweep(policies=POLICIES, etas=ETAS, seeds=N_SEEDS,
+                           n_rounds=N_ROUNDS)
+    stable = engine_jax.sweep(policies=POLICIES, etas=(0.0,), seeds=N_SEEDS,
+                              n_rounds=N_ROUNDS, fluctuate=False)
+
     print(f"{'eta':>6} | " + " | ".join(f"{p:>16}" for p in POLICIES[1:]))
-    for eta in [None, 1.0, 1.5, 1.9, 1.99]:
-        totals = {p: np.mean([run_one(p, eta, s, n_rounds=200)
-                              for s in range(3)]) for p in POLICIES}
-        fed = totals["fedcs"]
-        cells = [f"{100*(fed-totals[p])/fed:+15.2f}%" for p in POLICIES[1:]]
-        label = "stable" if eta is None else f"{eta:.2f}"
+    for label, el in [("stable", stable.mean_elapsed()[:, 0])] + [
+            (f"{eta:.2f}", res.mean_elapsed()[:, i])
+            for i, eta in enumerate(ETAS)]:
+        fed = el[0]
+        cells = [f"{100*(fed-el[i])/fed:+15.2f}%"
+                 for i in range(1, len(POLICIES))]
         print(f"{label:>6} | " + " | ".join(cells))
     print("\n(positive = faster than FedCS; rows match paper Fig. 2)")
 

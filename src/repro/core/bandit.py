@@ -156,6 +156,13 @@ def greedy_select(
     Naive MAB-CS, where f is the UCB score itself and T_inc is not used).
 
     Returns the *ordered* selected sequence (order == upload schedule).
+
+    The elapsed-time accumulator ``t`` is clamped at 0 after each commit:
+    estimated elapsed time is a physical, nonnegative quantity, and the
+    clamp keeps the BIG exploration sentinel (tau = -BIG for never-selected
+    clients under the element-wise amendment) from poisoning every later
+    T_inc comparison — required for the float32 on-device twin
+    (core.bandit_jax) to agree with this float64 reference.
     """
     remaining = list(int(c) for c in candidates)
     sel: list[int] = []
@@ -168,7 +175,7 @@ def greedy_select(
             scores = [-t_inc(t, t_d, est_ud[k], est_ul[k]) for k in remaining]
         x = remaining[int(np.argmax(scores))]
         remaining.remove(x)
-        t += t_inc(t, t_d, est_ud[x], est_ul[x])
+        t = max(t + t_inc(t, t_d, est_ud[x], est_ul[x]), 0.0)
         t_d = max(t_d, est_ul[x])
         sel.append(x)
     return sel

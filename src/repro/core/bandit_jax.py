@@ -2,9 +2,21 @@
 
 The numpy module drives the paper-faithful simulator (K=100); this module is
 the production path: state as [K] device arrays, UCB scoring via the Pallas
-kernel (kernels/ucb_score.py), Algorithm-1 greedy selection as a
+kernel (kernels/ucb_score.py) at large K, Algorithm-1 greedy selection as a
 ``lax.fori_loop`` (jit-able end-to-end, so the whole Client Selection step
 runs on-device even for millions of arms).
+
+All six reference policies are available behind a common mask-based
+interface
+
+    select_fn(state, cand_mask, key, true_ud, true_ul, hyper) -> [S] idx
+
+(``-1``-padded when fewer than S candidates exist), registered in
+``SELECT_FNS`` / ``POLICY_IDS`` so a ``lax.switch`` over the policy axis can
+drive the on-device sweep engine (sim/engine_jax.py).  ``hyper`` is the one
+scalar hyper-parameter a policy consumes (alpha for naive UCB, beta for
+element-wise UCB; the others ignore it), traced so it can be vmapped over a
+hyper-parameter grid.
 
 Property tests (tests/test_bandit_jax.py) assert exact agreement with the
 numpy reference policies.
@@ -13,31 +25,65 @@ numpy reference policies.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 BIG = 1e12
 
+# select_naive routes scoring through the Pallas kernel at or above this K
+# (below it, the fixed pallas_call overhead dominates the fused HBM pass).
+KERNEL_MIN_K = 4096
+
+DEFAULT_ALPHA = 1000.0
+DEFAULT_BETA = 50.0
+HIST_WINDOW = 5         # Extended-FedCS moving-average window (paper: 5)
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class BanditState:
+    """Mirrors core.bandit.ClientStats as [K] device arrays."""
+
     n_sel: jnp.ndarray      # [K] int32
     sum_ud: jnp.ndarray     # [K] f32
     sum_ul: jnp.ndarray     # [K] f32
     sum_tinc: jnp.ndarray   # [K] f32
     total: jnp.ndarray      # [] int32
+    last_ud: jnp.ndarray    # [K] f32  (FedCS; 0 = never selected)
+    last_ul: jnp.ndarray    # [K] f32
+    hist_ud: jnp.ndarray    # [K, W] f32 ring buffers (Extended FedCS)
+    hist_ul: jnp.ndarray    # [K, W] f32
+    hist_n: jnp.ndarray     # [K] int32  valid ring-buffer entries
 
     @staticmethod
-    def create(k: int) -> "BanditState":
+    def create(k: int, window: int = HIST_WINDOW) -> "BanditState":
+        z = lambda: jnp.zeros(k, jnp.float32)
         return BanditState(
             n_sel=jnp.zeros(k, jnp.int32),
-            sum_ud=jnp.zeros(k, jnp.float32),
-            sum_ul=jnp.zeros(k, jnp.float32),
-            sum_tinc=jnp.zeros(k, jnp.float32),
+            sum_ud=z(), sum_ul=z(), sum_tinc=z(),
             total=jnp.zeros((), jnp.int32),
+            last_ud=z(), last_ul=z(),
+            hist_ud=jnp.zeros((k, window), jnp.float32),
+            hist_ul=jnp.zeros((k, window), jnp.float32),
+            hist_n=jnp.zeros(k, jnp.int32),
+        )
+
+    @staticmethod
+    def from_numpy(stats) -> "BanditState":
+        """Lift a core.bandit.ClientStats snapshot onto the device."""
+        return BanditState(
+            n_sel=jnp.asarray(stats.n_sel, jnp.int32),
+            sum_ud=jnp.asarray(stats.sum_ud, jnp.float32),
+            sum_ul=jnp.asarray(stats.sum_ul, jnp.float32),
+            sum_tinc=jnp.asarray(stats.sum_tinc, jnp.float32),
+            total=jnp.asarray(stats.total_sel, jnp.int32),
+            last_ud=jnp.asarray(stats.last_ud, jnp.float32),
+            last_ul=jnp.asarray(stats.last_ul, jnp.float32),
+            hist_ud=jnp.asarray(stats.hist_ud, jnp.float32),
+            hist_ul=jnp.asarray(stats.hist_ul, jnp.float32),
+            hist_n=jnp.asarray(stats.hist_n, jnp.int32),
         )
 
     def replace(self, **kw) -> "BanditState":
@@ -53,22 +99,43 @@ def ucb_bonus(state: BanditState) -> jnp.ndarray:
 
 def observe(state: BanditState, idx: jnp.ndarray, t_ud: jnp.ndarray,
             t_ul: jnp.ndarray, tinc: jnp.ndarray) -> BanditState:
-    """Batch reward update for the selected clients (idx: [S])."""
+    """Batch reward update for the selected clients (idx: [S]).
+
+    Entries with ``idx < 0`` (the -1 padding emitted by the select fns when
+    fewer than S candidates exist) are no-ops: they are routed out of bounds
+    and dropped by the scatter.
+    """
+    k = state.n_sel.shape[0]
+    w = state.hist_ud.shape[1]
+    idx = idx.astype(jnp.int32)
+    valid = (idx >= 0) & (idx < k)
+    safe = jnp.where(valid, idx, k)                 # k => out of bounds: drop
+    slot = state.n_sel[jnp.clip(idx, 0, k - 1)] % w
     return state.replace(
-        n_sel=state.n_sel.at[idx].add(1),
-        sum_ud=state.sum_ud.at[idx].add(t_ud),
-        sum_ul=state.sum_ul.at[idx].add(t_ul),
-        sum_tinc=state.sum_tinc.at[idx].add(tinc),
-        total=state.total + idx.shape[0],
+        n_sel=state.n_sel.at[safe].add(1, mode="drop"),
+        sum_ud=state.sum_ud.at[safe].add(t_ud, mode="drop"),
+        sum_ul=state.sum_ul.at[safe].add(t_ul, mode="drop"),
+        sum_tinc=state.sum_tinc.at[safe].add(tinc, mode="drop"),
+        total=state.total + valid.sum().astype(jnp.int32),
+        last_ud=state.last_ud.at[safe].set(t_ud, mode="drop"),
+        last_ul=state.last_ul.at[safe].set(t_ul, mode="drop"),
+        hist_ud=state.hist_ud.at[safe, slot].set(t_ud, mode="drop"),
+        hist_ul=state.hist_ul.at[safe, slot].set(t_ul, mode="drop"),
+        hist_n=jnp.minimum(state.hist_n.at[safe].add(1, mode="drop"), w),
     )
 
 
 def _greedy_tinc(est_ud: jnp.ndarray, est_ul: jnp.ndarray,
                  cand_mask: jnp.ndarray, s_round: int) -> jnp.ndarray:
     """Algorithm 1 on estimates: returns [s_round] selected indices
-    (-1 padded).  est_*: [K]; cand_mask: [K] bool."""
-    k = est_ud.shape[0]
+    (-1 padded).  est_*: [K]; cand_mask: [K] bool.
 
+    Ties break toward the lowest client index (argmax convention), matching
+    the numpy reference when candidates are fed in sorted order.  As in the
+    numpy greedy_select, the elapsed accumulator is clamped at 0 so the BIG
+    exploration sentinel cannot poison later T_inc comparisons (in float32
+    a t of -BIG would absorb every real time difference entirely).
+    """
     def body(i, carry):
         sel, mask, t, t_d = carry
         new_t_d = jnp.maximum(t_d, est_ul)
@@ -78,7 +145,7 @@ def _greedy_tinc(est_ud: jnp.ndarray, est_ul: jnp.ndarray,
         ok = mask[x]
         sel = sel.at[i].set(jnp.where(ok, x, -1))
         mask = mask.at[x].set(False)
-        t = jnp.where(ok, t + tinc[x], t)
+        t = jnp.where(ok, jnp.maximum(t + tinc[x], 0.0), t)
         t_d = jnp.where(ok, jnp.maximum(t_d, est_ul[x]), t_d)
         return sel, mask, t, t_d
 
@@ -88,32 +155,156 @@ def _greedy_tinc(est_ud: jnp.ndarray, est_ul: jnp.ndarray,
     return sel
 
 
-def select_elementwise(state: BanditState, candidates: jnp.ndarray,
-                       s_round: int, beta: float = 50.0) -> jnp.ndarray:
-    """Element-wise MAB-CS (Eqs. 5-7), vectorized.  candidates: [C] indices."""
+def _top_score(score: jnp.ndarray, cand_mask: jnp.ndarray,
+               s_round: int) -> jnp.ndarray:
+    """Top-S by score over the candidate set, -1 padded (= greedy order when
+    the per-client score is fixed, as in Naive MAB-CS / random)."""
+    score = jnp.where(cand_mask, score, -jnp.inf)
+    _, idx = jax.lax.top_k(score, s_round)
+    valid = jnp.take(cand_mask, idx)
+    return jnp.where(valid, idx, -1).astype(jnp.int32)
+
+
+def candidate_mask(k: int, candidates: jnp.ndarray) -> jnp.ndarray:
+    return jnp.zeros(k, bool).at[candidates].set(True)
+
+
+# ---------------------------------------------------------------------------
+# The six reference policies behind the common mask-based interface.
+#   select_*_mask(state, cand_mask, key, true_ud, true_ul, hyper) -> [S] idx
+# ---------------------------------------------------------------------------
+
+def _mean(sums: jnp.ndarray, n: jnp.ndarray) -> jnp.ndarray:
+    return sums / jnp.maximum(n.astype(jnp.float32), 1.0)
+
+
+def select_fedcs_mask(state, cand_mask, key, true_ud, true_ul, hyper,
+                      *, s_round: int) -> jnp.ndarray:
+    """FedCS: last observed latency is the estimate (never-seen => 0 s)."""
+    return _greedy_tinc(state.last_ud, state.last_ul, cand_mask, s_round)
+
+
+def select_extended_fedcs_mask(state, cand_mask, key, true_ud, true_ul, hyper,
+                               *, s_round: int) -> jnp.ndarray:
+    """Extended FedCS: moving average of the last W observations."""
+    n = jnp.maximum(state.hist_n, 1).astype(jnp.float32)
+    return _greedy_tinc(state.hist_ud.sum(1) / n, state.hist_ul.sum(1) / n,
+                        cand_mask, s_round)
+
+
+def _naive_scores(state: BanditState, alpha, use_kernel: bool) -> jnp.ndarray:
+    """Eq. (4) score over all arms, via the fused Pallas kernel or jnp."""
+    if use_kernel:
+        from repro.kernels.ops import ucb_scores
+        return ucb_scores(state.sum_tinc, state.n_sel, state.total,
+                          alpha=float(alpha))
+    return -_mean(state.sum_tinc, state.n_sel) / alpha + ucb_bonus(state)
+
+
+def select_naive_mask(state, cand_mask, key, true_ud, true_ul, hyper,
+                      *, s_round: int) -> jnp.ndarray:
+    """Naive MAB-CS (Eq. 4): pure UCB-score top-S over the candidate set.
+
+    ``hyper`` is alpha.  When alpha is a concrete float and K >= KERNEL_MIN_K
+    the fused Pallas kernel scores all arms in one HBM pass; a traced alpha
+    (hyper-parameter sweeps) falls back to the jnp elementwise path.
+    """
+    k = state.n_sel.shape[0]
+    use_kernel = isinstance(hyper, (int, float)) and k >= KERNEL_MIN_K
+    return _top_score(_naive_scores(state, hyper, use_kernel), cand_mask,
+                      s_round)
+
+
+def select_elementwise_mask(state, cand_mask, key, true_ud, true_ul, hyper,
+                            *, s_round: int) -> jnp.ndarray:
+    """Element-wise MAB-CS (Eqs. 5-7).  ``hyper`` is beta."""
     bonus = ucb_bonus(state)
-    nf = jnp.maximum(state.n_sel.astype(jnp.float32), 1.0)
-    tau_ud = state.sum_ud / nf / beta - bonus
-    tau_ul = state.sum_ul / nf / beta - bonus
-    mask = jnp.zeros(state.n_sel.shape[0], bool).at[candidates].set(True)
-    return _greedy_tinc(tau_ud, tau_ul, mask, s_round)
+    tau_ud = _mean(state.sum_ud, state.n_sel) / hyper - bonus
+    tau_ul = _mean(state.sum_ul, state.n_sel) / hyper - bonus
+    return _greedy_tinc(tau_ud, tau_ul, cand_mask, s_round)
+
+
+def select_random_mask(state, cand_mask, key, true_ud, true_ul, hyper,
+                       *, s_round: int) -> jnp.ndarray:
+    """Uniform S-subset of the candidates (random scores + top-S)."""
+    r = jax.random.uniform(key, cand_mask.shape)
+    return _top_score(r, cand_mask, s_round)
+
+
+def select_oracle_mask(state, cand_mask, key, true_ud, true_ul, hyper,
+                       *, s_round: int) -> jnp.ndarray:
+    """Clairvoyant: greedy on this round's true sampled times (upper bound)."""
+    return _greedy_tinc(true_ud, true_ul, cand_mask, s_round)
+
+
+SELECT_FNS: dict[str, Callable] = {
+    "fedcs": select_fedcs_mask,
+    "extended_fedcs": select_extended_fedcs_mask,
+    "naive_ucb": select_naive_mask,
+    "elementwise_ucb": select_elementwise_mask,
+    "random": select_random_mask,
+    "oracle": select_oracle_mask,
+}
+POLICY_NAMES: list[str] = list(SELECT_FNS)
+POLICY_IDS: dict[str, int] = {n: i for i, n in enumerate(POLICY_NAMES)}
+# sensible default for the one scalar hyper-parameter each policy reads
+DEFAULT_HYPERS: dict[str, float] = {
+    "fedcs": 0.0, "extended_fedcs": 0.0, "naive_ucb": DEFAULT_ALPHA,
+    "elementwise_ucb": DEFAULT_BETA, "random": 0.0, "oracle": 0.0,
+}
+
+
+# ---------------------------------------------------------------------------
+# Candidate-index convenience wrappers (the original public API).
+# ---------------------------------------------------------------------------
+
+def select_elementwise(state: BanditState, candidates: jnp.ndarray,
+                       s_round: int, beta: float = DEFAULT_BETA) -> jnp.ndarray:
+    """Element-wise MAB-CS (Eqs. 5-7), vectorized.  candidates: [C] indices."""
+    mask = candidate_mask(state.n_sel.shape[0], candidates)
+    return select_elementwise_mask(state, mask, None, None, None, beta,
+                                   s_round=s_round)
 
 
 def select_naive(state: BanditState, candidates: jnp.ndarray,
-                 s_round: int, alpha: float = 1000.0,
-                 use_kernel: bool = False) -> jnp.ndarray:
+                 s_round: int, alpha: float = DEFAULT_ALPHA,
+                 use_kernel: bool | None = None) -> jnp.ndarray:
     """Naive MAB-CS (Eq. 4): pure UCB-score top-S over the candidate set.
-    ``use_kernel`` routes scoring through the Pallas ucb_score kernel."""
-    if use_kernel:
-        from repro.kernels.ops import ucb_scores
-        score = ucb_scores(state.sum_tinc, state.n_sel, state.total,
-                           alpha=alpha)
-    else:
-        nf = jnp.maximum(state.n_sel.astype(jnp.float32), 1.0)
-        bonus = ucb_bonus(state)
-        score = -(state.sum_tinc / nf) / alpha + bonus
-    mask = jnp.zeros(state.n_sel.shape[0], bool).at[candidates].set(True)
-    score = jnp.where(mask, score, -jnp.inf)
-    _, idx = jax.lax.top_k(score, s_round)
-    valid = jnp.take(mask, idx)
-    return jnp.where(valid, idx, -1).astype(jnp.int32)
+
+    ``use_kernel`` routes scoring through the Pallas ucb_score kernel; the
+    default (None) auto-selects it for K >= KERNEL_MIN_K.
+    """
+    k = state.n_sel.shape[0]
+    mask = candidate_mask(k, candidates)
+    if use_kernel is None:
+        use_kernel = k >= KERNEL_MIN_K
+    return _top_score(_naive_scores(state, alpha, use_kernel), mask, s_round)
+
+
+def select_fedcs(state: BanditState, candidates: jnp.ndarray,
+                 s_round: int) -> jnp.ndarray:
+    mask = candidate_mask(state.n_sel.shape[0], candidates)
+    return select_fedcs_mask(state, mask, None, None, None, 0.0,
+                             s_round=s_round)
+
+
+def select_extended_fedcs(state: BanditState, candidates: jnp.ndarray,
+                          s_round: int) -> jnp.ndarray:
+    mask = candidate_mask(state.n_sel.shape[0], candidates)
+    return select_extended_fedcs_mask(state, mask, None, None, None, 0.0,
+                                      s_round=s_round)
+
+
+def select_random(state: BanditState, candidates: jnp.ndarray,
+                  s_round: int, key: jnp.ndarray) -> jnp.ndarray:
+    mask = candidate_mask(state.n_sel.shape[0], candidates)
+    return select_random_mask(state, mask, key, None, None, 0.0,
+                              s_round=s_round)
+
+
+def select_oracle(state: BanditState, candidates: jnp.ndarray,
+                  s_round: int, true_ud: jnp.ndarray,
+                  true_ul: jnp.ndarray) -> jnp.ndarray:
+    mask = candidate_mask(state.n_sel.shape[0], candidates)
+    return select_oracle_mask(state, mask, None, true_ud, true_ul, 0.0,
+                              s_round=s_round)

@@ -65,7 +65,11 @@ class FederatedServer:
     # ------------------------------------------------------------------
     def _resource_request(self) -> np.ndarray:
         n_req = math.ceil(self.cfg.n_clients * self.cfg.frac_request)
-        return self.rng.choice(self.cfg.n_clients, size=n_req, replace=False)
+        # sorted so score ties break toward the lowest client index — the
+        # same deterministic convention as the on-device engine (argmax /
+        # top_k), keeping numpy<->jax trajectories comparable
+        return np.sort(self.rng.choice(self.cfg.n_clients, size=n_req,
+                                       replace=False))
 
     def run_round(self, rnd: int,
                   failure_mask: np.ndarray | None = None) -> RoundRecord:

@@ -37,11 +37,9 @@ def _pad_to(x, mult, axis):
 def ucb_scores(sums, n_sel, total, alpha: float = 1000.0,
                interpret: bool | None = None):
     interpret = _default_interpret() if interpret is None else interpret
-    s, k = _pad_to(sums, _ucb.BLOCK, 0)
-    n, _ = _pad_to(n_sel, _ucb.BLOCK, 0)
-    out = _ucb.ucb_scores(s, n, jnp.asarray(total), alpha=alpha,
-                          interpret=interpret)
-    return out[:k]
+    # block padding is handled inside the kernel wrapper itself
+    return _ucb.ucb_scores(sums, n_sel, jnp.asarray(total), alpha=alpha,
+                           interpret=interpret)
 
 
 def fedavg_combine(stacked, weights, interpret: bool | None = None):

@@ -38,11 +38,19 @@ def _ucb_kernel(sum_ref, n_ref, total_ref, out_ref, *, alpha: float):
 @functools.partial(jax.jit, static_argnames=("alpha", "interpret"))
 def ucb_scores(sums: jnp.ndarray, n_sel: jnp.ndarray, total: jnp.ndarray,
                alpha: float = 1000.0, interpret: bool = True) -> jnp.ndarray:
-    """sums, n_sel: [K] (K padded to BLOCK); total: scalar int."""
+    """sums, n_sel: [K] for arbitrary K; total: scalar int.
+
+    K is padded up to a multiple of BLOCK internally (padding arms have
+    n == 0, so their BIG scores are sliced away before returning).
+    """
+    orig_k = sums.shape[0]
+    pad = (-orig_k) % BLOCK
+    if pad:
+        sums = jnp.pad(sums, (0, pad))
+        n_sel = jnp.pad(n_sel, (0, pad))
     k = sums.shape[0]
-    assert k % BLOCK == 0, f"pad K={k} to a multiple of {BLOCK}"
     grid = (k // BLOCK,)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_ucb_kernel, alpha=alpha),
         grid=grid,
         in_specs=[
@@ -55,3 +63,4 @@ def ucb_scores(sums: jnp.ndarray, n_sel: jnp.ndarray, total: jnp.ndarray,
         interpret=interpret,
     )(sums.astype(jnp.float32), n_sel.astype(jnp.int32),
       total.reshape(1).astype(jnp.int32))
+    return out[:orig_k]

@@ -209,6 +209,14 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
     return ob.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, KV, G, dh)
 
 
+def _ambient_abstract_mesh():
+    """The ambient abstract mesh, or None when there is none — including on
+    jax < 0.5, where the jax.sharding.get_abstract_mesh context API does not
+    exist at all (sharding is then pinned by the caller's mesh/shard_map)."""
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    return get() if get is not None else None
+
+
 def constrain_batch(x: jnp.ndarray, batch_dim: int = 0) -> jnp.ndarray:
     """Pin activation batch-sharding over the non-model mesh axes.
 
@@ -219,7 +227,7 @@ def constrain_batch(x: jnp.ndarray, batch_dim: int = 0) -> jnp.ndarray:
     activation sharding rules.  No-op outside a mesh context.
     """
     from jax.sharding import PartitionSpec as P
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = _ambient_abstract_mesh()
     if mesh is None or not mesh.axis_names:
         return x
     ba = tuple(a for a in mesh.axis_names if a != "model")
@@ -248,7 +256,7 @@ def _context_parallel_flash(q, k, v, *, causal, window, kv_valid_len):
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
-    am = jax.sharding.get_abstract_mesh()
+    am = _ambient_abstract_mesh()
     if am is None or "model" not in am.axis_names:
         return None
     ba = tuple(a for a in am.axis_names if a != "model")

@@ -1,0 +1,393 @@
+"""On-device vectorized twin of the FederatedServer round loop.
+
+The numpy simulator (fl/server.py) runs one Python iteration per round; a
+paper-figure sweep (policies x eta x seeds, 500 rounds each) takes minutes
+of host time while the accelerator idles.  This module expresses the whole
+protocol — truncated-normal resource sampling (Eqs. 8-11), candidate
+polling, policy selection (lax.switch over core.bandit_jax.SELECT_FNS),
+observation update, and elapsed-time accounting — as one ``lax.scan`` over
+rounds, ``vmap``-ed over a flattened (policy/hyper x eta x seed) grid, so a
+full sweep compiles to a single jit call.
+
+Fidelity: with sorted candidate polling (which fl/server.py also uses) the
+per-round selections and elapsed times match the numpy reference within
+float32 tolerance on a fixed-seed replay — asserted by
+tests/test_bandit_jax.py.  The on-device RNG (jax.random) is a different
+stream from numpy's, so *sampled* sweeps agree in distribution, not
+pointwise; ``run_replay`` accepts externally sampled times for exact
+common-random-number comparisons.
+
+Scenario dynamics (sim/scenarios.py) — correlated cell congestion, diurnal
+throughput drift, client churn — run inside the scan body, mirroring
+``ScenarioResources``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bandit_jax
+from repro.sim import network
+from repro.sim.resources import PAPER_MODEL_BITS
+from repro.sim.scenarios import (CAP_HIGH, CAP_LOW, Scenario, get_scenario)
+
+SQRT2 = math.sqrt(2.0)
+_P_LO = 0.5 * (1.0 + math.erf(-1.0 / SQRT2))     # Phi(-1)
+_P_HI = 0.5 * (1.0 + math.erf(+1.0 / SQRT2))     # Phi(+1)
+
+
+# ---------------------------------------------------------------------------
+# Eqs. (8)-(11): resource sampling, on device.
+# ---------------------------------------------------------------------------
+
+def sample_truncated_normal(key: jnp.ndarray, mean: jnp.ndarray,
+                            eta: jnp.ndarray) -> jnp.ndarray:
+    """JAX port of sim.resources.sample_truncated_normal (Eq. 8).
+
+    Inverse-CDF sampling of N(mu=mean, sigma^2=mean^eta) truncated to
+    [mean-sigma, mean+sigma]; Phi^-1 via erfinv (the numpy path uses
+    Acklam's approximation — both are exact to well below the fluctuation
+    scale).
+    """
+    mean = jnp.asarray(mean, jnp.float32)
+    sigma = jnp.sqrt(jnp.power(jnp.maximum(mean, 1e-12), eta))
+    u = jax.random.uniform(key, mean.shape, jnp.float32)
+    p = _P_LO + u * (_P_HI - _P_LO)
+    z = SQRT2 * jax.scipy.special.erfinv(2.0 * p - 1.0)
+    out = mean + sigma * z
+    return jnp.clip(out, jnp.maximum(mean - sigma, 1e-9), mean + sigma)
+
+
+def _throughput_bps(dist_m: jnp.ndarray) -> jnp.ndarray:
+    """jnp port of sim.network.throughput_bps (LTE link budget)."""
+    d = jnp.maximum(dist_m, network.MIN_DIST_M)
+    pl_db = (36.7 * jnp.log10(d) + 22.7
+             + 26.0 * jnp.log10(network.CARRIER_GHZ))
+    noise_dbm = (network.THERMAL_NOISE_DBM_HZ
+                 + 10.0 * jnp.log10(network.BANDWIDTH_HZ)
+                 + network.NOISE_FIGURE_DB)
+    snr_db = (network.TX_POWER_DBM + network.ANTENNA_GAIN_DBI - pl_db
+              - noise_dbm + network.LINK_MARGIN_DB)
+    rho = jnp.log2(1.0 + 10.0 ** (snr_db / 10.0) / network.SHANNON_DELTA)
+    return network.BANDWIDTH_HZ * jnp.minimum(rho, network.RHO_MAX)
+
+
+# ---------------------------------------------------------------------------
+# Realized schedule math for a -1-padded selection (Sect. II / Eq. 1).
+# ---------------------------------------------------------------------------
+
+def _schedule(sel: jnp.ndarray, t_ud: jnp.ndarray,
+              t_ul: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (round_time, incs[S]) for selection ``sel`` ([S], -1 padded).
+
+    round_time is the physically realized schedule (multicast distribution
+    T_d = max t_UL, parallel local update, sequential upload in order) —
+    bandit.true_round_time; incs is the per-client Eq. (1) accumulation the
+    server records as the T_inc observation.
+    """
+    valid = sel >= 0
+    safe = jnp.where(valid, sel, 0)
+    ud = jnp.where(valid, t_ud[safe], 0.0)
+    ul = jnp.where(valid, t_ul[safe], 0.0)
+
+    t_d = jnp.max(jnp.where(valid, ul, 0.0))
+    def tbody(t, x):
+        ud_k, ul_k, v = x
+        t2 = jnp.maximum(t, t_d + ud_k) + ul_k
+        return jnp.where(v, t2, t), None
+    round_time, _ = jax.lax.scan(tbody, t_d, (ud, ul, valid))
+
+    def ibody(carry, x):
+        t, td = carry
+        ud_k, ul_k, v = x
+        ntd = jnp.maximum(td, ul_k)
+        inc = (ntd - td) + jnp.maximum(ud_k - (t - td), 0.0) + ul_k
+        return ((jnp.where(v, t + inc, t), jnp.where(v, ntd, td)),
+                jnp.where(v, inc, 0.0))
+    _, incs = jax.lax.scan(ibody, (jnp.float32(0), jnp.float32(0)),
+                           (ud, ul, valid))
+    return round_time, incs
+
+
+def _switch_select(policy_idx, s_round: int):
+    """A select_fn dispatching on a *traced* policy index (replay mode).
+    The sampled sweep instead unrolls the policy axis statically — a vmap
+    over lax.switch would evaluate every branch for every grid point."""
+    branches = [functools.partial(bandit_jax.SELECT_FNS[n], s_round=s_round)
+                for n in bandit_jax.POLICY_NAMES]
+
+    def select(state, cand_mask, key, t_ud, t_ul, hyper):
+        return jax.lax.switch(policy_idx, branches, state, cand_mask, key,
+                              t_ud, t_ul, hyper)
+    return select
+
+
+def _round(state, cand_mask, t_ud, t_ul, select_fn, hyper, key):
+    """One protocol round given this round's candidates and true times."""
+    sel = select_fn(state, cand_mask, key, t_ud, t_ul, hyper)
+    round_time, incs = _schedule(sel, t_ud, t_ul)
+    valid = sel >= 0
+    safe = jnp.where(valid, sel, 0)
+    state = bandit_jax.observe(state, sel, t_ud[safe], t_ul[safe], incs)
+    return state, round_time, sel
+
+
+# ---------------------------------------------------------------------------
+# Replay mode: externally supplied candidates/times (exact CRN comparisons).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("s_round",))
+def run_replay(policy_idx: jnp.ndarray, hyper: jnp.ndarray,
+               cand_masks: jnp.ndarray, t_ud_rounds: jnp.ndarray,
+               t_ul_rounds: jnp.ndarray, key: jnp.ndarray,
+               *, s_round: int):
+    """Run R rounds from precomputed inputs.
+
+    cand_masks: [R, K] bool; t_*_rounds: [R, K].  Returns a dict with
+    round_times [R], elapsed [R] (cumulative), selected [R, S] and the final
+    BanditState — the common-random-numbers twin of FederatedServer.run.
+    """
+    k = t_ud_rounds.shape[1]
+    state0 = bandit_jax.BanditState.create(k)
+
+    select_fn = _switch_select(policy_idx, s_round)
+
+    def step(carry, x):
+        state, key = carry
+        cand_mask, t_ud, t_ul = x
+        key, sub = jax.random.split(key)
+        state, rt, sel = _round(state, cand_mask,
+                                t_ud.astype(jnp.float32),
+                                t_ul.astype(jnp.float32),
+                                select_fn, hyper, sub)
+        return (state, key), (rt, sel)
+
+    (state, _), (rts, sels) = jax.lax.scan(
+        step, (state0, key), (cand_masks, t_ud_rounds, t_ul_rounds))
+    return {"round_times": rts, "elapsed": jnp.cumsum(rts),
+            "selected": sels, "state": state}
+
+
+# ---------------------------------------------------------------------------
+# Sampled mode: the full on-device sweep.
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EnvArrays:
+    """Static scenario state shipped to the device once per sweep."""
+
+    mean_theta: jnp.ndarray     # [K] mean throughput, bit/s
+    mean_gamma: jnp.ndarray     # [K] mean capability, samples/s
+    n_samples: jnp.ndarray      # [K] local dataset sizes D_k
+    cell_id: jnp.ndarray        # [K] int32 congestion-cell assignment
+
+    @staticmethod
+    def from_scenario(scenario: Scenario, env) -> "EnvArrays":
+        return EnvArrays(
+            mean_theta=jnp.asarray(env.mean_throughput_bps, jnp.float32),
+            mean_gamma=jnp.asarray(env.mean_capability, jnp.float32),
+            n_samples=jnp.asarray(env.n_samples, jnp.float32),
+            cell_id=jnp.asarray(scenario.cell_ids(env.n_clients), jnp.int32),
+        )
+
+
+def _cand_masks(key: jnp.ndarray, n_rounds: int, k: int,
+                n_req: int) -> jnp.ndarray:
+    """[R, K] bool: every round's Resource-Request candidate subset."""
+    perms = jax.vmap(lambda kk: jax.random.permutation(kk, k)[:n_req])(
+        jax.random.split(key, n_rounds))
+    return jnp.zeros((n_rounds, k), bool).at[
+        jnp.arange(n_rounds)[:, None], perms].set(True)
+
+
+def _run_one(env: EnvArrays, model_bits, hyper, eta, seed,
+             *, policy: str, scen: Scenario, n_rounds: int, s_round: int,
+             n_req: int, fluctuate: bool):
+    """One grid point: the full protocol over rounds.  Returns [R] round
+    times.  ``policy`` and the scenario dynamics are static — the sweep
+    unrolls the policy axis so each compiled branch runs only its own
+    selection rule, and switched-off dynamics are compiled away entirely.
+
+    Without churn the per-round resources have no sequential dependence, so
+    everything random — candidates, diurnal/congestion multipliers, the
+    truncated-normal draws — is pre-sampled as [R, ...] arrays in a few
+    fused ops, leaving only select/schedule/observe inside the scan.
+    """
+    k = env.mean_theta.shape[0]
+    state0 = bandit_jax.BanditState.create(k)
+    k_cand, k_theta, k_gamma, k_pol, k_cong, k_churn = jax.random.split(
+        jax.random.PRNGKey(seed), 6)
+    select_fn = functools.partial(bandit_jax.SELECT_FNS[policy],
+                                  s_round=s_round)
+    cand_masks = _cand_masks(k_cand, n_rounds, k, n_req)
+    pol_keys = jax.random.split(k_pol, n_rounds)
+    # 1-based to match ScenarioResources, whose advance() runs before the
+    # first sample_times: round r uses diurnal_multiplier(r + 1)
+    rounds = jnp.arange(1, n_rounds + 1, dtype=jnp.float32)
+
+    # per-round multiplier on mean throughput (scenario dynamics) ----------
+    thr_mult = jnp.ones((n_rounds, 1), jnp.float32)
+    if scen.diurnal_amp > 0.0 and scen.diurnal_period > 0:
+        thr_mult = thr_mult * jnp.maximum(
+            1.0 + scen.diurnal_amp
+            * jnp.sin(2.0 * math.pi * rounds / scen.diurnal_period),
+            0.05)[:, None]
+    if scen.congestion_cells > 0 and scen.congestion_sigma > 0.0:
+        cell_f = jnp.exp(scen.congestion_sigma * jax.random.normal(
+            k_cong, (n_rounds, scen.congestion_cells)))
+        thr_mult = thr_mult * cell_f[:, env.cell_id]
+
+    def sample_times(theta_mu, gamma_mu, k_t, k_g):
+        """Eqs. (8)-(11) for mean arrays of any leading shape."""
+        if fluctuate:
+            theta = sample_truncated_normal(k_t, theta_mu, eta)
+            gamma = sample_truncated_normal(k_g, gamma_mu, eta)
+        else:
+            theta, gamma = theta_mu, gamma_mu
+        return (env.n_samples / jnp.maximum(gamma, 1e-9),
+                model_bits / jnp.maximum(theta, 1e-9))
+
+    if scen.churn_prob == 0.0:
+        # fast path: pre-sample all R rounds of resources in one shot
+        t_ud_all, t_ul_all = sample_times(
+            env.mean_theta[None, :] * thr_mult,
+            jnp.broadcast_to(env.mean_gamma, (n_rounds, k)), k_theta, k_gamma)
+
+        def step(state, x):
+            cand_mask, t_ud, t_ul, kp = x
+            state, round_time, _ = _round(state, cand_mask, t_ud, t_ul,
+                                          select_fn, hyper, kp)
+            return state, round_time
+        _, round_times = jax.lax.scan(
+            step, state0, (cand_masks, t_ud_all, t_ul_all, pol_keys))
+        return round_times
+
+    # churn path: client means evolve between rounds, sample inside the scan
+    theta_keys = jax.random.split(k_theta, n_rounds)
+    gamma_keys = jax.random.split(k_gamma, n_rounds)
+    churn_keys = jax.random.split(k_churn, n_rounds)
+
+    def step(carry, x):
+        state, mean_theta, mean_gamma = carry
+        cand_mask, mult, k_t, k_g, kp, kc = x
+        t_ud, t_ul = sample_times(mean_theta * mult, mean_gamma, k_t, k_g)
+        state, round_time, _ = _round(state, cand_mask, t_ud, t_ul,
+                                      select_fn, hyper, kp)
+        # maybe replace one client with a fresh device (new mean resources;
+        # the server's stale statistics are the point of the scenario)
+        kc1, kc2, kc3, kc4 = jax.random.split(kc, 4)
+        do = jax.random.uniform(kc1) < scen.churn_prob
+        j = jax.random.randint(kc2, (), 0, k)
+        r = jnp.maximum(network.CELL_RADIUS_M
+                        * jnp.sqrt(jax.random.uniform(kc3)),
+                        network.MIN_DIST_M)
+        hit = do & (jnp.arange(k) == j)
+        mean_theta = jnp.where(hit, _throughput_bps(r), mean_theta)
+        mean_gamma = jnp.where(
+            hit, jax.random.uniform(kc4, (), jnp.float32, CAP_LOW, CAP_HIGH),
+            mean_gamma)
+        return (state, mean_theta, mean_gamma), round_time
+
+    carry0 = (state0, env.mean_theta, env.mean_gamma)
+    _, round_times = jax.lax.scan(
+        step, carry0, (cand_masks, thr_mult, theta_keys, gamma_keys,
+                       pol_keys, churn_keys))
+    return round_times
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "policies", "scen", "n_rounds", "s_round", "n_req", "fluctuate"))
+def _run_grid(env: EnvArrays, model_bits, hypers, eta, seed,
+              *, policies: tuple[str, ...], scen: Scenario, n_rounds,
+              s_round, n_req, fluctuate):
+    """One jit call for the whole sweep: the policy axis is unrolled
+    statically (each entry vmaps its own selection rule over the flattened
+    [E*S] eta/seed axes); hypers: [P], eta/seed: [E*S]."""
+    out = []
+    for i, name in enumerate(policies):
+        f = functools.partial(_run_one, policy=name, scen=scen,
+                              n_rounds=n_rounds, s_round=s_round,
+                              n_req=n_req, fluctuate=fluctuate)
+        g = jax.vmap(f, in_axes=(None, None, None, 0, 0))
+        out.append(g(env, model_bits, hypers[i], eta, seed))
+    return jnp.stack(out)          # [P, E*S, R]
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """Round times for every (policy, eta, seed) grid point, on host."""
+
+    policies: tuple[str, ...]
+    hypers: tuple[float, ...]
+    etas: tuple[float, ...]
+    seeds: tuple[int, ...]
+    round_times: np.ndarray     # [P, E, S, R]
+
+    @property
+    def elapsed(self) -> np.ndarray:
+        """Final elapsed time per grid point, [P, E, S]."""
+        return self.round_times.sum(axis=-1)
+
+    def mean_elapsed(self) -> np.ndarray:
+        """Seed-averaged elapsed time, [P, E] (paper Figs. 1-2 input)."""
+        return self.elapsed.mean(axis=-1)
+
+
+def sweep(scenario: Scenario | str = "paper-baseline",
+          policies=tuple(bandit_jax.POLICY_NAMES),
+          etas=(1.0, 1.5, 1.9),
+          seeds=8,
+          n_rounds: int = 500,
+          n_clients: int = 100,
+          s_round: int = 5,
+          frac_request: float = 0.1,
+          model_bits: float = PAPER_MODEL_BITS,
+          env_seed: int = 0,
+          fluctuate: bool = True) -> SweepResult:
+    """Run the full (policy x eta x seed) grid as ONE jit call.
+
+    ``policies`` entries are names or (name, hyper) pairs — the hyper is the
+    policy's scalar knob (alpha / beta), so hyper-parameter sweeps just list
+    the same policy several times.  ``seeds`` is an int (=> range) or an
+    explicit sequence.
+    """
+    scenario = get_scenario(scenario) if isinstance(scenario, str) else scenario
+    pol_names, hypers = [], []
+    for p in policies:
+        name, hyper = p if isinstance(p, tuple) else (p, None)
+        if name not in bandit_jax.SELECT_FNS:
+            raise ValueError(f"unknown policy {name!r}; "
+                             f"have {bandit_jax.POLICY_NAMES}")
+        pol_names.append(name)
+        hypers.append(float(bandit_jax.DEFAULT_HYPERS[name]
+                            if hyper is None else hyper))
+    seeds = tuple(range(seeds)) if isinstance(seeds, int) else tuple(seeds)
+    etas = tuple(float(e) for e in etas)
+
+    env = scenario.build_env(n_clients, np.random.default_rng(env_seed))
+    env_arrays = EnvArrays.from_scenario(scenario, env)
+
+    # flatten the shared (E, S) axes; the policy axis stays static
+    grid_e, grid_s = np.meshgrid(np.arange(len(etas)), np.arange(len(seeds)),
+                                 indexing="ij")
+    g_eta = np.array(etas, np.float32)[grid_e.ravel()]
+    g_seed = np.array(seeds, np.int64)[grid_s.ravel()]
+
+    rts = _run_grid(
+        env_arrays, jnp.float32(model_bits),
+        jnp.asarray(hypers, jnp.float32), jnp.asarray(g_eta),
+        jnp.asarray(g_seed),
+        policies=tuple(pol_names), scen=scenario, n_rounds=n_rounds,
+        s_round=s_round, n_req=math.ceil(n_clients * frac_request),
+        fluctuate=fluctuate)
+    rts = np.asarray(rts).reshape(len(pol_names), len(etas), len(seeds),
+                                  n_rounds)
+    return SweepResult(policies=tuple(pol_names), hypers=tuple(hypers),
+                       etas=etas, seeds=seeds, round_times=rts)

@@ -24,17 +24,13 @@ from repro.sim.network import NetworkEnv
 SQRT2 = math.sqrt(2.0)
 
 
-def _phi(x: np.ndarray) -> np.ndarray:
-    """Standard normal CDF via erf (no scipy in this environment)."""
-    try:  # vectorized erf: numpy>=2.0 has np.special? fall back to math via vectorize
-        from numpy import vectorize
-        return 0.5 * (1.0 + _ERF(np.asarray(x, dtype=np.float64)))
-    except Exception:  # pragma: no cover
-        raise
-
-
 # Vectorized erf built once. math.erf is exact; vectorize is fine at K<=1e6.
 _ERF = np.vectorize(math.erf, otypes=[np.float64])
+
+
+def _phi(x: np.ndarray) -> np.ndarray:
+    """Standard normal CDF via erf: Phi(x) = (1 + erf(x/sqrt(2))) / 2."""
+    return 0.5 * (1.0 + _ERF(np.asarray(x, dtype=np.float64) / SQRT2))
 
 
 def _phi_inv(p: np.ndarray) -> np.ndarray:

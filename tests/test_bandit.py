@@ -1,11 +1,10 @@
 """Unit + property tests for the paper's core: Eq. (1) round-time math,
 Algorithm 1, the UCB policies, and numpy/jax agreement."""
 
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hyp import given, settings, st
 
 from repro.core import bandit_jax
 from repro.core.bandit import (ClientStats, ElementwiseMabCS, FedCS,
@@ -137,13 +136,7 @@ def test_jax_elementwise_matches_numpy(seed):
     cands = rng.choice(k, size=10, replace=False)
     want = pol.select(st_np, cands, rng)
 
-    state = bandit_jax.BanditState(
-        n_sel=jnp.asarray(st_np.n_sel, jnp.int32),
-        sum_ud=jnp.asarray(st_np.sum_ud, jnp.float32),
-        sum_ul=jnp.asarray(st_np.sum_ul, jnp.float32),
-        sum_tinc=jnp.asarray(st_np.sum_tinc, jnp.float32),
-        total=jnp.asarray(st_np.total_sel, jnp.int32),
-    )
+    state = bandit_jax.BanditState.from_numpy(st_np)
     got = bandit_jax.select_elementwise(state, jnp.asarray(cands, jnp.int32),
                                         s_round=s_round)
     assert [int(x) for x in got] == want

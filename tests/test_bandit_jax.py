@@ -1,0 +1,245 @@
+"""numpy <-> JAX parity for the vectorized selection stack.
+
+Three layers, increasingly end-to-end:
+  1. BanditState.observe mirrors ClientStats (sums, last-obs, ring buffers);
+  2. every policy port in core.bandit_jax reproduces its numpy reference
+     selection exactly (same order) on random stats snapshots;
+  3. the on-device sweep engine (sim.engine_jax), fed the same candidates
+     and realized times as the numpy FederatedServer (common random
+     numbers), reproduces the per-round elapsed times within float32
+     tolerance over a full fixed-seed run.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.core import bandit_jax
+from repro.core.bandit import (ClientStats, ElementwiseMabCS, ExtendedFedCS,
+                               FedCS, NaiveMabCS, Oracle, greedy_select,
+                               make_policy)
+from repro.fl.server import FederatedServer, FLConfig
+from repro.sim import engine_jax
+from repro.sim.network import make_network_env
+from repro.sim.resources import PAPER_MODEL_BITS, ResourceModel
+
+
+def _random_stats(rng, k, all_seen=True):
+    """A ClientStats snapshot with randomized observation history."""
+    st_ = ClientStats.create(k)
+    n_sel = rng.integers(1 if all_seen else 0, 8, k)
+    for c in range(k):
+        for _ in range(n_sel[c]):
+            ud, ul = rng.uniform(1, 100), rng.uniform(1, 100)
+            st_.observe(c, ud, ul, ud + 2 * ul)
+    return st_
+
+
+# ---------------------------------------------------------------------------
+# 1. observation/state parity
+# ---------------------------------------------------------------------------
+
+def test_observe_matches_clientstats():
+    rng = np.random.default_rng(0)
+    k = 12
+    st_np = ClientStats.create(k)
+    st_jx = bandit_jax.BanditState.create(k)
+    for _ in range(40):
+        c = int(rng.integers(k))
+        ud, ul, inc = rng.uniform(1, 50, 3)
+        st_np.observe(c, ud, ul, inc)
+        st_jx = bandit_jax.observe(st_jx, jnp.asarray([c]),
+                                   jnp.asarray([ud], jnp.float32),
+                                   jnp.asarray([ul], jnp.float32),
+                                   jnp.asarray([inc], jnp.float32))
+    np.testing.assert_array_equal(np.asarray(st_jx.n_sel), st_np.n_sel)
+    np.testing.assert_array_equal(np.asarray(st_jx.hist_n), st_np.hist_n)
+    assert int(st_jx.total) == st_np.total_sel
+    for a, b in [(st_jx.sum_ud, st_np.sum_ud), (st_jx.sum_ul, st_np.sum_ul),
+                 (st_jx.last_ud, st_np.last_ud), (st_jx.last_ul, st_np.last_ul),
+                 (st_jx.hist_ud, st_np.hist_ud), (st_jx.hist_ul, st_np.hist_ul)]:
+        np.testing.assert_allclose(np.asarray(a), b, rtol=1e-5)
+
+
+def test_observe_negative_idx_is_noop():
+    """-1 padding (fewer candidates than S) must not touch the state."""
+    st_jx = bandit_jax.BanditState.create(4)
+    st2 = bandit_jax.observe(st_jx, jnp.asarray([-1, 2]),
+                             jnp.asarray([9.0, 3.0]),
+                             jnp.asarray([9.0, 4.0]),
+                             jnp.asarray([9.0, 5.0]))
+    assert int(st2.total) == 1
+    assert int(st2.n_sel[0]) == 0 and int(st2.n_sel[2]) == 1
+    assert float(st2.sum_ud.sum()) == pytest.approx(3.0)
+
+
+# ---------------------------------------------------------------------------
+# 2. per-policy selection parity (exact, including order)
+# ---------------------------------------------------------------------------
+
+def _jax_select(name, st_np, cands, s_round, true_times=None, key=None):
+    state = bandit_jax.BanditState.from_numpy(st_np)
+    mask = bandit_jax.candidate_mask(len(st_np.n_sel), jnp.asarray(cands))
+    fn = bandit_jax.SELECT_FNS[name]
+    t_ud = None if true_times is None else jnp.asarray(true_times[0],
+                                                       jnp.float32)
+    t_ul = None if true_times is None else jnp.asarray(true_times[1],
+                                                       jnp.float32)
+    out = fn(state, mask, key, t_ud, t_ul,
+             bandit_jax.DEFAULT_HYPERS[name], s_round=s_round)
+    return [int(x) for x in out if int(x) >= 0]
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_jax_elementwise_matches_numpy(seed):
+    rng = np.random.default_rng(seed)
+    k, s_round = 20, 5
+    st_np = _random_stats(rng, k)
+    cands = np.sort(rng.choice(k, size=10, replace=False))
+    want = ElementwiseMabCS(k, s_round).select(st_np, cands, rng)
+    assert _jax_select("elementwise_ucb", st_np, cands, s_round) == want
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_jax_naive_matches_numpy(seed):
+    rng = np.random.default_rng(seed)
+    k, s_round = 20, 5
+    st_np = _random_stats(rng, k)
+    cands = np.sort(rng.choice(k, size=10, replace=False))
+    want = NaiveMabCS(k, s_round).select(st_np, cands, rng)
+    assert _jax_select("naive_ucb", st_np, cands, s_round) == want
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_jax_fedcs_and_extended_match_numpy(seed):
+    rng = np.random.default_rng(seed)
+    k, s_round = 16, 4
+    # include never-seen clients: the 0-s first-timer rule must agree too
+    st_np = _random_stats(rng, k, all_seen=False)
+    cands = np.sort(rng.choice(k, size=10, replace=False))
+    want_f = FedCS(k, s_round).select(st_np, cands, rng)
+    want_e = ExtendedFedCS(k, s_round).select(st_np, cands, rng)
+    assert _jax_select("fedcs", st_np, cands, s_round) == want_f
+    assert _jax_select("extended_fedcs", st_np, cands, s_round) == want_e
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_jax_oracle_matches_numpy(seed):
+    rng = np.random.default_rng(seed)
+    k, s_round = 16, 4
+    st_np = _random_stats(rng, k, all_seen=False)
+    cands = np.sort(rng.choice(k, size=8, replace=False))
+    t_ud = rng.uniform(1, 100, k)
+    t_ul = rng.uniform(1, 100, k)
+    want = Oracle(k, s_round).select(st_np, cands, rng,
+                                     true_times=(t_ud, t_ul))
+    got = _jax_select("oracle", st_np, cands, s_round,
+                      true_times=(t_ud, t_ul))
+    assert got == want
+
+
+def test_jax_random_is_valid_subset():
+    rng = np.random.default_rng(0)
+    k, s_round = 16, 4
+    st_np = _random_stats(rng, k, all_seen=False)
+    cands = np.sort(rng.choice(k, size=8, replace=False))
+    got = _jax_select("random", st_np, cands, s_round,
+                      key=jax.random.PRNGKey(0))
+    assert len(got) == s_round and len(set(got)) == s_round
+    assert set(got) <= set(int(c) for c in cands)
+
+
+def test_naive_kernel_path_matches_jnp_path():
+    """The Pallas scoring path (auto-chosen at K >= KERNEL_MIN_K) must give
+    the same selection as the elementwise jnp path."""
+    rng = np.random.default_rng(1)
+    k = bandit_jax.KERNEL_MIN_K
+    state = bandit_jax.BanditState.create(k).replace(
+        n_sel=jnp.asarray(rng.integers(1, 9, k), jnp.int32),
+        sum_tinc=jnp.asarray(rng.uniform(1, 500, k), jnp.float32),
+        total=jnp.asarray(5 * k, jnp.int32))
+    cands = jnp.asarray(np.sort(rng.choice(k, size=64, replace=False)))
+    a = bandit_jax.select_naive(state, cands, 8, use_kernel=True)
+    b = bandit_jax.select_naive(state, cands, 8, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# 3. full-run engine parity vs FederatedServer (common random numbers)
+# ---------------------------------------------------------------------------
+
+def _replay_inputs(cfg: FLConfig, res: ResourceModel, n_rounds: int):
+    """Replicate the server's per-round rng stream: candidate poll, then
+    (theta, gamma) truncated-normal draws."""
+    rng = np.random.default_rng(cfg.seed)
+    k = cfg.n_clients
+    n_req = math.ceil(k * cfg.frac_request)
+    masks = np.zeros((n_rounds, k), bool)
+    t_ud = np.zeros((n_rounds, k))
+    t_ul = np.zeros((n_rounds, k))
+    for r in range(n_rounds):
+        cand = np.sort(rng.choice(k, size=n_req, replace=False))
+        masks[r, cand] = True
+        t_ud[r], t_ul[r] = res.sample_times(rng)
+    return masks, t_ud, t_ul
+
+
+@pytest.mark.parametrize("policy", ["fedcs", "extended_fedcs", "naive_ucb",
+                                    "elementwise_ucb", "oracle"])
+def test_engine_replay_matches_server(policy):
+    n, s_round, rounds = 40, 4, 30
+    env = make_network_env(n, np.random.default_rng(7))
+    res = ResourceModel(env, eta=1.5, model_bits=PAPER_MODEL_BITS)
+    cfg = FLConfig(n_clients=n, frac_request=0.25, s_round=s_round, seed=3)
+
+    srv = FederatedServer(cfg, make_policy(policy, n, s_round), res)
+    srv.run(rounds)
+
+    masks, t_ud, t_ul = _replay_inputs(cfg, res, rounds)
+    out = engine_jax.run_replay(
+        jnp.int32(bandit_jax.POLICY_IDS[policy]),
+        jnp.float32(bandit_jax.DEFAULT_HYPERS[policy]),
+        jnp.asarray(masks), jnp.asarray(t_ud, jnp.float32),
+        jnp.asarray(t_ul, jnp.float32), jax.random.PRNGKey(0),
+        s_round=s_round)
+
+    want_rt = np.array([rec.round_time for rec in srv.history])
+    np.testing.assert_allclose(np.asarray(out["round_times"]), want_rt,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(out["elapsed"])[-1], srv.elapsed,
+                               rtol=1e-4)
+    for r, rec in enumerate(srv.history):
+        got = [int(x) for x in out["selected"][r] if int(x) >= 0]
+        assert got == rec.selected, f"round {r} selection diverged"
+
+
+def test_sweep_single_jit_full_grid():
+    """The acceptance-criteria grid (6 policies x 3 eta x 8 seeds) runs as
+    one jit call and produces sane, policy-distinguishable output."""
+    res = engine_jax.sweep(n_rounds=12, n_clients=40, seeds=8,
+                           etas=(1.0, 1.5, 1.9), frac_request=0.25)
+    assert res.round_times.shape == (6, 3, 8, 12)
+    assert np.all(res.round_times > 0)
+    el = res.mean_elapsed()        # [P, E], seed-averaged
+    assert np.all(np.isfinite(el))
+    # the clairvoyant oracle must beat random selection on seed average
+    p = {n_: i for i, n_ in enumerate(res.policies)}
+    assert np.all(el[p["oracle"]] < el[p["random"]])
+
+
+def test_sweep_scenarios_run():
+    for name in ["heavy-tail-stragglers", "correlated-congestion",
+                 "diurnal-drift", "client-churn"]:
+        res = engine_jax.sweep(name, n_rounds=6, n_clients=24, seeds=2,
+                               etas=(1.5,),
+                               policies=("fedcs", "elementwise_ucb"))
+        assert res.round_times.shape == (2, 1, 2, 6)
+        assert np.all(np.isfinite(res.round_times))

@@ -1,11 +1,10 @@
 """Property tests for upload compression (int8 / top-k with error feedback)."""
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hyp import given, settings, st
 
 from repro.distributed import compression as C
 

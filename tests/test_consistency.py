@@ -7,12 +7,11 @@
   are permutation-equivariant.
 """
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hyp import given, settings, st
 
 from repro.models.registry import build
 

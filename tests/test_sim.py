@@ -4,10 +4,9 @@ server protocol invariants."""
 
 import math
 
-import hypothesis.strategies as st
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hyp import given, settings, st
 
 from repro.core.bandit import make_policy
 from repro.fl.server import FederatedServer, FLConfig
@@ -116,3 +115,20 @@ def test_deadline_caps_round_time():
     srv = _server(deadline_s=100.0)
     srv.run(10)
     assert all(r.round_time <= 100.0 for r in srv.history)
+
+
+def test_scenario_resources_drive_server():
+    """Every named scenario plugs into the numpy FederatedServer."""
+    from repro.core.bandit import make_policy
+    from repro.sim.scenarios import SCENARIOS, ScenarioResources
+
+    for name, scen in SCENARIOS.items():
+        rng = np.random.default_rng(0)
+        env = scen.build_env(20, rng)
+        res = ScenarioResources(scen, env, model_bits=PAPER_MODEL_BITS,
+                                seed=0)
+        srv = FederatedServer(FLConfig(n_clients=20, s_round=3, seed=0),
+                              make_policy("elementwise_ucb", 20, 3), res)
+        srv.run(8)
+        assert len(srv.history) == 8, name
+        assert srv.elapsed > 0, name
