@@ -1,0 +1,112 @@
+"""Learning-coupled engine speedup: the on-device (vmap/scan) accuracy
+sweep vs the classic host loop it replaces, grid-for-grid.
+
+Both sides run the identical workload — the same seeds, deriving the same
+random streams (tests/test_fl_engine.py asserts trajectory parity under
+common random numbers; this file asserts the speed):
+
+  * host  — fl/engine.run_host_reference once per seed: LocalTrainer +
+    aggregation.fedavg, one jitted SGD step per minibatch, per-round
+    host-side selection/scheduling/evaluation.  Timed steady-state (jit
+    caches pre-warmed), so the recorded gap is pure orchestration.
+  * engine — fl/engine.accuracy_sweep: the whole seed grid in ONE jit
+    call, local SGD vmapped over clients and the grid axis.  The vmap is
+    what the host loop cannot do: per-op dispatch/thread-sync overhead is
+    amortized across the grid, which is exactly how paper-figure sweeps
+    (Figs. 4-6, many policies x seeds) are produced.
+
+Client count and recipe are paper scale (K=100, S=5, E=5 epochs); the
+model is reduced to the CNN's FC head so that orchestration — per-batch
+dispatch, host-device syncs, per-client Python — dominates both sides.
+That is the thing the engine eliminates; with the full conv stack both
+sides become conv-throughput-bound on CPU and the ratio measures Eigen,
+not orchestration (fidelity of the conv path is pinned separately by
+tests/test_fl_engine.py).  ``--smoke`` shrinks everything for the CI job.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.fl import engine
+from repro.models import cnn
+
+TARGET_X = 10.0
+
+
+def main(fast: bool = False) -> list[str]:
+    smoke = fast
+    cfg = cnn.CnnConfig(image_size=8, channels=(), pool_after=(),
+                        fc_units=(64,), batchnorm=False)
+    if smoke:
+        k, rounds, n_train, n_test, max_samples, epochs, n_seeds = \
+            30, 4, 500, 200, 20, 2, 2
+    else:
+        k, rounds, n_train, n_test, max_samples, epochs, n_seeds = \
+            100, 10, 2000, 400, 20, 5, 8
+    task = engine.make_cnn_task("paper-baseline", k, cfg=cfg,
+                                n_train=n_train, n_test=n_test,
+                                batch_size=5, eval_batch=n_test,
+                                max_samples=max_samples)
+    run = dict(policy="elementwise_ucb", s_round=5, frac_request=0.2,
+               epochs=epochs, batch_size=5, cfg=cfg)
+    sweep_kw = dict(task=task, policies=(run["policy"],),
+                    seeds=tuple(range(n_seeds)), n_rounds=rounds,
+                    s_round=run["s_round"], frac_request=run["frac_request"],
+                    epochs=epochs, batch_size=5, cfg=cfg,
+                    cohort="selected")
+
+    # warm both sides' jit caches, then time steady-state
+    engine.run_host_reference(task, seed=0, n_rounds=1, **run)
+    t0 = time.time()
+    hosts = [engine.run_host_reference(task, seed=s, n_rounds=rounds, **run)
+             for s in range(n_seeds)]
+    host_s = time.time() - t0
+
+    t0 = time.time()
+    res = engine.accuracy_sweep(**sweep_kw)
+    compile_s = time.time() - t0
+    t0 = time.time()
+    res = engine.accuracy_sweep(**sweep_kw)
+    engine_s = time.time() - t0
+
+    t0 = time.time()
+    res_all = engine.accuracy_sweep(**{**sweep_kw, "cohort": "all"})
+    all_compile_s = time.time() - t0
+    t0 = time.time()
+    res_all = engine.accuracy_sweep(**{**sweep_kw, "cohort": "all"})
+    all_s = time.time() - t0
+
+    # same workload check: every seed's selections match the host loop
+    for s, host in enumerate(hosts):
+        assert np.array_equal(res.selected[0, s], host["selected"]), \
+            f"engine diverged from the host loop at seed {s}"
+    assert np.isfinite(res.accuracy).all()
+    assert np.isfinite(res_all.accuracy).all()
+
+    grid_rounds = n_seeds * rounds
+    speedup = host_s / engine_s
+    out = ["name,us_per_call,derived"]
+    out.append(f"fl_engine/host_loop,{1e6*host_s/grid_rounds:.0f},"
+               f"total={host_s:.2f}s seeds={n_seeds} rounds={rounds} "
+               f"K={k} S={run['s_round']} E={epochs}")
+    out.append(f"fl_engine/engine_selected,{1e6*engine_s/grid_rounds:.0f},"
+               f"total={engine_s:.2f}s compile={compile_s:.2f}s "
+               f"(one jit call for the whole grid)")
+    out.append(f"fl_engine/engine_all,{1e6*all_s/grid_rounds:.0f},"
+               f"total={all_s:.2f}s compile={all_compile_s:.2f}s "
+               f"(trains all {k} clients, masks at aggregation)")
+    out.append(f"fl_engine/speedup,,x{speedup:.1f} "
+               f"(target >= {TARGET_X:.0f}x, cohort=selected)")
+    if not smoke:
+        assert speedup >= TARGET_X, \
+            f"engine speedup x{speedup:.1f} below target x{TARGET_X:.0f}"
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    for line in main(fast=("--smoke" in sys.argv or "--fast" in sys.argv)):
+        print(line)

@@ -7,6 +7,7 @@ benches.  Prints ``name,us_per_call,derived`` CSV lines.
   kernels — Pallas kernel micro-benches (interpret mode vs jnp reference)
   roofline— per (arch x shape) roofline terms from the dry-run artifacts
   scale   — selection-at-scale: vectorized UCB scoring for 1e6 arms
+  fl_engine — learning-coupled engine vs the classic host training loop
 
 ``python -m benchmarks.run --fast`` runs reduced sizes (CI); default runs
 the full paper-scale settings.
@@ -40,8 +41,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_accuracy, bench_convergence, bench_drift,
-                            bench_kernels, bench_roofline, bench_scale,
-                            bench_selection, bench_sweep)
+                            bench_fl_engine, bench_kernels, bench_roofline,
+                            bench_scale, bench_selection, bench_sweep)
     sections = {
         "fig1_2": bench_selection.main,
         "fig3": bench_accuracy.main,
@@ -51,6 +52,7 @@ def main() -> None:
         "roofline": bench_roofline.main,
         "scale": bench_scale.main,
         "sweep": bench_sweep.main,
+        "fl_engine": bench_fl_engine.main,
     }
     if args.only:
         keep = set(args.only.split(","))

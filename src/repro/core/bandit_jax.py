@@ -25,6 +25,7 @@ numpy reference policies.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable
 
 import jax
@@ -252,6 +253,15 @@ DEFAULT_HYPERS: dict[str, float] = {
     "fedcs": 0.0, "extended_fedcs": 0.0, "naive_ucb": DEFAULT_ALPHA,
     "elementwise_ucb": DEFAULT_BETA, "random": 0.0, "oracle": 0.0,
 }
+
+
+def make_select_fn(policy: str, s_round: int) -> Callable:
+    """Resolve a policy name into its mask-based select_fn with the cohort
+    size bound — the common entry point of both on-device engines
+    (sim/engine_jax.py and fl/engine.py).  Raises on unknown names."""
+    if policy not in SELECT_FNS:
+        raise ValueError(f"unknown policy {policy!r}; have {POLICY_NAMES}")
+    return functools.partial(SELECT_FNS[policy], s_round=s_round)
 
 
 # ---------------------------------------------------------------------------

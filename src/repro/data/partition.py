@@ -26,19 +26,63 @@ def iid_partition(dataset: ImageDataset, n_samples_per_client: np.ndarray,
 def dirichlet_partition(dataset: ImageDataset, n_samples_per_client: np.ndarray,
                         alpha: float, rng: np.random.Generator,
                         n_classes: int = 10) -> list[np.ndarray]:
+    """Non-IID split: client k's label distribution ~ Dirichlet(alpha).
+
+    Small alpha => each client concentrates on a few classes; alpha -> inf
+    recovers IID.  Deterministic under ``rng``'s seed, and every client gets
+    exactly its requested D_k samples: per-class draws are capped at the
+    class size and the shortfall is redistributed over classes with room
+    (proportionally to the client's Dirichlet weights, so the skew is kept).
+    """
     by_class = [np.flatnonzero(dataset.y == c) for c in range(n_classes)]
+    sizes = np.array([len(b) for b in by_class])
+    if int(np.max(n_samples_per_client, initial=0)) > int(sizes.sum()):
+        raise ValueError("a client requests more samples than the dataset has")
     parts = []
     for d in n_samples_per_client:
+        d = int(d)
         p = rng.dirichlet(alpha * np.ones(n_classes))
-        counts = rng.multinomial(int(d), p)
+        counts = np.minimum(rng.multinomial(d, p), sizes)
+        while counts.sum() < d:
+            room = sizes - counts
+            q = np.where(room > 0, p, 0.0)
+            q = q / q.sum() if q.sum() > 0 else (room > 0) / (room > 0).sum()
+            counts += np.minimum(rng.multinomial(d - counts.sum(), q), room)
         idx = np.concatenate([
-            rng.choice(by_class[c], size=min(counts[c], len(by_class[c])),
-                       replace=False)
+            rng.choice(by_class[c], size=counts[c], replace=False)
             for c in range(n_classes) if counts[c] > 0
         ]) if d > 0 else np.empty(0, np.int64)
         rng.shuffle(idx)
         parts.append(idx)
     return parts
+
+
+def pad_partitions(parts: list[np.ndarray], cap: int | None = None,
+                   round_to: int | None = None) -> tuple[np.ndarray,
+                                                         np.ndarray]:
+    """Pack per-client index lists into device-ready fixed-shape arrays.
+
+    Returns ``(idx [K, cap] int32, count [K] int32)``.  Padding repeats the
+    client's first index so gathers stay in-bounds; consumers must mask by
+    ``count`` (fl/engine.py does, via its valid-batch mask).  ``cap``
+    defaults to the largest shard; shards longer than ``cap`` are
+    truncated.  ``round_to`` floors the cap at that value and rounds it up
+    to a multiple — the batch-size invariant make_client_update's
+    valid-batch masking relies on, defined here ONCE for the engine and
+    the trainer.
+    """
+    counts = np.array([len(p) for p in parts], np.int64)
+    cap = int(counts.max(initial=1)) if cap is None else int(cap)
+    if round_to is not None:
+        cap = -(-max(cap, round_to) // round_to) * round_to
+    counts = np.minimum(counts, cap)
+    idx = np.zeros((len(parts), cap), np.int64)
+    for i, p in enumerate(parts):
+        n = int(counts[i])
+        if n:
+            idx[i, :n] = p[:n]
+            idx[i, n:] = p[0]
+    return idx.astype(np.int32), counts.astype(np.int32)
 
 
 def client_batches(dataset: ImageDataset, idx: np.ndarray, batch_size: int,

@@ -12,17 +12,36 @@ from __future__ import annotations
 from typing import Any
 
 import jax
+import jax.flatten_util          # not re-exported by bare `import jax`
 import jax.numpy as jnp
 import numpy as np
 
-from repro.utils.trees import tree_weighted_sum
+from repro.utils.trees import tree_param_count, tree_weighted_sum
+
+# Route through the Pallas kernel once the model is at least this large:
+# below it the fixed pallas_call overhead dominates the single fused pass.
+KERNEL_MIN_PARAMS = 1 << 16
 
 
 def fedavg(client_params: list[Any], weights: list[float],
-           use_kernel: bool = False) -> Any:
-    """Weighted average of client parameter pytrees."""
-    w = np.asarray(weights, dtype=np.float64)
-    w = (w / w.sum()).astype(np.float32)
+           use_kernel: bool | None = None) -> Any:
+    """Weighted average of client parameter pytrees.
+
+    ``use_kernel`` routes the combine through the Pallas fedavg kernel; the
+    default (None) auto-selects it when the model holds at least
+    KERNEL_MIN_PARAMS parameters AND a TPU backend is present (in CPU
+    interpret mode the kernel body runs op-by-op in Python, orders of
+    magnitude slower than the fused jnp path, so auto never picks it
+    there).  Both paths compute the same result — asserted by
+    tests/test_kernels.py::test_fedavg_routing_parity.
+    """
+    # f32 normalization, matching fl/engine.py's in-jit combine bit-for-bit
+    # (x64 is unavailable on device, and counts are O(1e3) — exact in f32)
+    w = np.asarray(weights, dtype=np.float32)
+    w = w / w.sum()
+    if use_kernel is None:
+        use_kernel = (jax.default_backend() == "tpu"
+                      and tree_param_count(client_params[0]) >= KERNEL_MIN_PARAMS)
     if not use_kernel:
         return tree_weighted_sum(client_params, w)
     from repro.kernels.ops import fedavg_combine  # lazy: kernels are optional

@@ -1,29 +1,27 @@
 """Glue: the paper's CNN + synthetic CIFAR + local SGD, as a LocalTrainer.
 
-Implements the paper's exact per-round client recipe: 5 epochs of
-minibatch-50 SGD at lr 0.25 * 0.99^round, FedAvg weighted by D_k.
+Implements the paper's exact per-round client recipe — 5 epochs of
+minibatch-50 SGD at the shared schedule lr 0.25 * 0.99^round (defined once
+in optim/sgd.py), FedAvg weighted by D_k — by driving the SAME pure step
+function the learning-coupled engine vmaps over clients
+(fl/engine.py::make_client_update), one jitted call per client.  Keeping
+both paths on one function is what lets tests/test_fl_engine.py pin the
+engine to this host loop round-for-round.
 """
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.data.partition import iid_partition
+from repro.data.partition import iid_partition, pad_partitions
 from repro.data.synthetic import ImageDataset, make_synthetic_cifar
 from repro.fl.aggregation import fedavg
+from repro.fl.engine import jitted_client_update
 from repro.fl.server import LocalTrainer
 from repro.models import cnn
-
-
-@functools.partial(jax.jit, static_argnames=("lr",))
-def _sgd_step(params, batch, lr: float):
-    (loss, acc), grads = jax.value_and_grad(cnn.loss_fn, has_aux=True)(params, batch)
-    new_params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
-    return new_params, loss, acc
+from repro.optim.sgd import PAPER_LR0, PAPER_LR_DECAY
 
 
 @jax.jit
@@ -46,32 +44,33 @@ class CnnFlTrainer(LocalTrainer):
     def __init__(self, n_clients: int, n_samples_per_client: np.ndarray,
                  seed: int = 0, n_train: int = 50_000, n_test: int = 10_000,
                  batch_size: int = 50, epochs: int = 5,
-                 lr0: float = 0.25, lr_decay: float = 0.99):
+                 lr0: float = PAPER_LR0, lr_decay: float = PAPER_LR_DECAY):
         self.train_set, self.test_set = make_synthetic_cifar(
             n_train=n_train, n_test=n_test, seed=seed)
         rng = np.random.default_rng(seed + 1)
         self.parts = iid_partition(self.train_set, n_samples_per_client, rng)
+        idx, count = pad_partitions(self.parts, round_to=batch_size)
+        self.part_idx = jnp.asarray(idx)
+        self.part_count = jnp.asarray(count)
         self.batch_size = batch_size
         self.epochs = epochs
         self.lr0, self.lr_decay = lr0, lr_decay
-        self.rng = np.random.default_rng(seed + 2)
+        self._base_key = jax.random.PRNGKey(seed + 2)
+        self._update = jitted_client_update(cnn.CnnConfig(), epochs,
+                                            batch_size)
+        self._train_x = jnp.asarray(self.train_set.x)
+        self._train_y = jnp.asarray(self.train_set.y, jnp.int32)
         params = cnn.init(jax.random.PRNGKey(seed))
 
         super().__init__(params, self._client_update_impl, self._aggregate_impl)
 
     # ------------------------------------------------------------------
     def _client_update_impl(self, params, k: int, rnd: int):
-        idx = self.parts[k]
-        lr = self.lr0 * (self.lr_decay ** rnd)
-        p = params
-        for _ in range(self.epochs):
-            perm = self.rng.permutation(idx)
-            for s in range(0, len(perm) - self.batch_size + 1, self.batch_size):
-                sel = perm[s:s + self.batch_size]
-                batch = {"x": jnp.asarray(self.train_set.x[sel]),
-                         "y": jnp.asarray(self.train_set.y[sel])}
-                p, _, _ = _sgd_step(p, batch, lr)
-        return p, float(len(idx))
+        key = jax.random.fold_in(jax.random.fold_in(self._base_key, rnd), k)
+        lr = jnp.float32(self.lr0 * self.lr_decay ** rnd)
+        p = self._update(params, self._train_x, self._train_y,
+                         self.part_idx[k], self.part_count[k], lr, key)
+        return p, float(self.part_count[k])
 
     def _aggregate_impl(self, global_params, results):
         params_list = [p for p, _ in results]

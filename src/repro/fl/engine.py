@@ -1,0 +1,672 @@
+"""Learning-coupled FL engine: accuracy-vs-time curves, fully on device.
+
+The paper's headline evaluation (Figs. 4-6) is **test accuracy versus
+elapsed time** — the MAB selector only matters because faster rounds buy
+more model updates per wall-clock second.  The time-only sweep engine
+(sim/engine_jax.py) produces the elapsed-time axis; this module couples it
+to real learning: the **entire FL protocol — bandit polling/selection,
+truncated-normal resource draws and elapsed-time accounting, per-client
+local SGD, and weighted FedAvg aggregation — runs as one ``lax.scan`` over
+rounds**, with local training ``vmap``-ed over clients (each client's E
+epochs x minibatch SGD is an inner scan over its pre-partitioned on-device
+shard) and the selection mask folded into aggregation as zero weights
+through the Pallas ``fedavg`` kernel, so unselected clients drop out
+without any host branching.
+
+Two cohort layouts, provably equivalent (tests/test_fl_engine.py):
+
+  * ``cohort="all"``      — local SGD vmaps over ALL K clients every round;
+    unselected clients train too but aggregate with weight 0.  No gathers
+    anywhere; the accelerator-throughput layout.
+  * ``cohort="selected"`` — local SGD vmaps over the S selected slots
+    (client shards gathered by traced index).  K/S times less compute; the
+    CPU / large-K layout.
+
+The whole (policy x seed) accuracy sweep is ONE jit call
+(``accuracy_sweep``), emitting per-round ``(elapsed_time, test_accuracy,
+selected)`` traces plus ToA@x summaries (fl/metrics.py).  Correctness is
+anchored by ``run_host_reference`` — the classic disconnected host loop
+built from the existing ``LocalTrainer``/``aggregation.fedavg`` pieces,
+driven by the same presampled random stream, which the engine must match
+round-for-round (selections exact, elapsed times exact, accuracy within
+float tolerance).
+
+Scenario dynamics (sim/scenarios.py) — congestion, diurnal drift, client
+churn — reuse the shared helpers in sim/engine_jax.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from repro.core import bandit_jax
+from repro.data.partition import (dirichlet_partition, iid_partition,
+                                  pad_partitions)
+from repro.data.synthetic import make_synthetic_cifar
+from repro.fl import metrics
+from repro.fl.aggregation import fedavg
+from repro.fl.server import LocalTrainer
+from repro.models import cnn
+from repro.optim.sgd import paper_lr
+from repro.sim import engine_jax
+from repro.sim.scenarios import Scenario, get_scenario
+from repro.utils.trees import tree_bytes
+
+# Paper Sect. IV-B local recipe (the lr side lives in optim/sgd.py).
+PAPER_EPOCHS = 5
+PAPER_BATCH = 50
+
+
+# ---------------------------------------------------------------------------
+# Task bundle: everything the scan needs, shipped to the device once.
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FlTask:
+    """On-device FL task: global data, padded per-client shards, resources.
+
+    ``part_idx`` is [K, cap] int32 into ``train_x`` (cap a multiple of the
+    batch size; padding repeats the first index and is masked by
+    ``part_count``).  The test set is pre-chunked [C, B, ...] so evaluation
+    is a bounded-memory inner scan.
+    """
+
+    env: engine_jax.EnvArrays   # per-client mean resources (time side)
+    params0: Any                # initial model pytree
+    train_x: jnp.ndarray        # [N, H, W, 3] f32
+    train_y: jnp.ndarray        # [N] int32
+    test_x: jnp.ndarray         # [C, B, H, W, 3] f32
+    test_y: jnp.ndarray         # [C, B] int32
+    test_mask: jnp.ndarray      # [C, B] bool (False = padding)
+    part_idx: jnp.ndarray       # [K, cap] int32
+    part_count: jnp.ndarray     # [K] int32
+
+    @property
+    def n_clients(self) -> int:
+        return int(self.part_count.shape[0])
+
+
+def make_cnn_task(scenario: Scenario | str = "paper-baseline",
+                  n_clients: int = 100, *,
+                  cfg: cnn.CnnConfig = cnn.CnnConfig(),
+                  n_train: int = 50_000, n_test: int = 10_000,
+                  seed: int = 0, env_seed: int = 0,
+                  partition: str = "iid", dirichlet_alpha: float = 0.5,
+                  batch_size: int = PAPER_BATCH, eval_batch: int = 500,
+                  max_samples: int | None = None) -> FlTask:
+    """Build the paper's CIFAR task for the engine.
+
+    Client dataset sizes are the scenario environment's D_k (the same D_k
+    that drives t_UD, so the time and learning sides stay coherent);
+    ``max_samples`` clips them for fast runs.  ``partition`` is "iid"
+    (paper) or "dirichlet" (the paper's non-IID setting).
+    """
+    scen = get_scenario(scenario) if isinstance(scenario, str) else scenario
+    train, test = make_synthetic_cifar(n_train=n_train, n_test=n_test,
+                                       size=cfg.image_size, seed=seed)
+    env = scen.build_env(n_clients, np.random.default_rng(env_seed))
+    if max_samples is not None:
+        env = dataclasses.replace(
+            env, n_samples=np.minimum(env.n_samples, max_samples))
+    rng = np.random.default_rng(seed + 1)
+    if partition == "iid":
+        parts = iid_partition(train, env.n_samples, rng)
+    elif partition == "dirichlet":
+        parts = dirichlet_partition(train, env.n_samples, dirichlet_alpha,
+                                    rng, n_classes=cfg.n_classes)
+    else:
+        raise ValueError(f"unknown partition {partition!r}")
+    idx, count = pad_partitions(parts, round_to=batch_size)
+
+    n_chunks = math.ceil(len(test.y) / eval_batch)
+    pad = n_chunks * eval_batch - len(test.y)
+    tx = np.concatenate([test.x, np.zeros((pad,) + test.x.shape[1:],
+                                          test.x.dtype)])
+    ty = np.concatenate([test.y, np.zeros(pad, test.y.dtype)])
+    tm = np.arange(n_chunks * eval_batch) < len(test.y)
+
+    return FlTask(
+        env=engine_jax.EnvArrays.from_scenario(scen, env),
+        params0=cnn.init(jax.random.PRNGKey(seed), cfg),
+        train_x=jnp.asarray(train.x), train_y=jnp.asarray(train.y, jnp.int32),
+        test_x=jnp.asarray(tx).reshape(n_chunks, eval_batch, *test.x.shape[1:]),
+        test_y=jnp.asarray(ty, jnp.int32).reshape(n_chunks, eval_batch),
+        test_mask=jnp.asarray(tm).reshape(n_chunks, eval_batch),
+        part_idx=jnp.asarray(idx), part_count=jnp.asarray(count),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pure step functions (also consumed by fl/cnn_trainer.py's host path).
+# ---------------------------------------------------------------------------
+
+def make_client_update(loss_fn, *, epochs: int, batch_size: int):
+    """The paper's per-round client recipe as ONE pure function:
+    E epochs of minibatch SGD over the client's padded shard.
+
+    Each epoch draws a fresh permutation of the shard (invalid padding
+    slots sort last); batches that don't fit inside the client's true
+    ``count`` are masked out (the remainder is dropped, as in the host
+    trainer).  The whole thing is an inner ``lax.scan`` with a static trip
+    count, so it vmaps over clients with no shape polymorphism.
+    """
+    def client_update(params, train_x, train_y, idx, count, lr, key):
+        cap = idx.shape[0]
+        n_b = cap // batch_size
+        pos = jnp.arange(cap)
+
+        def epoch_perm(kk):
+            r = jax.random.uniform(kk, (cap,)) + 2.0 * (pos >= count)
+            return idx[jnp.argsort(r)]
+
+        perms = jax.vmap(epoch_perm)(jax.random.split(key, epochs))
+        batches = perms.reshape(epochs * n_b, batch_size)
+        in_epoch = jnp.tile(jnp.arange(n_b), epochs)
+        valid = (in_epoch + 1) * batch_size <= count
+
+        def step(p, x):
+            bidx, v = x
+            batch = {"x": train_x[bidx], "y": train_y[bidx]}
+            grads, _ = jax.grad(loss_fn, has_aux=True)(p, batch)
+            newp = jax.tree.map(lambda pp, g: pp - lr * g, p, grads)
+            return jax.tree.map(lambda a, b: jnp.where(v, a, b), newp, p), None
+
+        p, _ = jax.lax.scan(step, params, (batches, valid))
+        return p
+
+    return client_update
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_client_update(cfg: cnn.CnnConfig, epochs: int, batch_size: int):
+    """Cached host-side jit of the whole client recipe, keyed by the static
+    config — fl/cnn_trainer.py's production path, and repeated host runs
+    (tests, benchmarks) reuse the compilation instead of re-tracing fresh
+    closures."""
+    return jax.jit(make_client_update(
+        functools.partial(cnn.loss_fn, cfg=cfg),
+        epochs=epochs, batch_size=batch_size))
+
+
+def make_evaluator(apply_fn):
+    """Test accuracy over the pre-chunked test set as a bounded-memory scan."""
+    def evaluate(params, test_x, test_y, test_mask):
+        def chunk(c, x):
+            cx, cy, cm = x
+            pred = jnp.argmax(apply_fn(params, cx), -1)
+            return c + jnp.sum((pred == cy) & cm), None
+        correct, _ = jax.lax.scan(chunk, jnp.int32(0),
+                                  (test_x, test_y, test_mask))
+        return correct.astype(jnp.float32) / jnp.maximum(test_mask.sum(), 1)
+    return evaluate
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_evaluator(cfg: cnn.CnnConfig):
+    """Cached host-side jit of the evaluator (see jitted_client_update)."""
+    return jax.jit(make_evaluator(functools.partial(cnn.apply, cfg=cfg)))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_sgd_step(cfg: cnn.CnnConfig):
+    """One jitted minibatch SGD step (batch gathered on device) — the
+    per-batch dispatch granularity of the classic host loop."""
+    loss_fn = functools.partial(cnn.loss_fn, cfg=cfg)
+
+    @jax.jit
+    def sgd_step(params, train_x, train_y, bidx, lr):
+        batch = {"x": train_x[bidx], "y": train_y[bidx]}
+        grads, _ = jax.grad(loss_fn, has_aux=True)(params, batch)
+        return jax.tree.map(lambda p, g: p - lr * g, params, grads)
+
+    return sgd_step
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_select_fn(policy: str, s_round: int):
+    return jax.jit(bandit_jax.make_select_fn(policy, s_round))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_schedule():
+    return jax.jit(engine_jax._schedule)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_observe():
+    return jax.jit(bandit_jax.observe)
+
+
+def _masked_fedavg(trained, weights: jnp.ndarray, use_kernel: bool):
+    """Weighted FedAvg of stacked [C, ...] client trees.
+
+    The selection mask arrives as zero weights, so unselected clients drop
+    out of the average with no branching; with ``use_kernel`` the flattened
+    combine is one Pallas ``fedavg`` pass (kernels/fedavg.py), otherwise a
+    jnp accumulation computing the identical contraction.
+    """
+    flat = jax.vmap(lambda t: ravel_pytree(t)[0])(trained)     # [C, N]
+    w = (weights / jnp.maximum(weights.sum(), 1e-9)).astype(flat.dtype)
+    if use_kernel:
+        from repro.kernels.ops import fedavg_combine
+        avg = fedavg_combine(flat, w)
+    else:
+        # left-to-right accumulation: the same association as the host
+        # path's tree_weighted_sum, so zero-weight rows add exact zeros
+        # and a replayed round aggregates bit-identically
+        avg = flat[0] * w[0]
+        for i in range(1, flat.shape[0]):
+            avg = avg + flat[i] * w[i]
+    unravel = ravel_pytree(jax.tree.map(lambda l: l[0], trained))[1]
+    return unravel(avg)
+
+
+def _train_round(params, sel, task: FlTask, lr, perm_key, *, client_update,
+                 cohort: str, use_kernel: bool):
+    """One round of local training + masked aggregation.
+
+    Per-client RNG is ``fold_in(perm_key, client_id)`` in both cohort
+    layouts, which is what makes them bit-compatible: a client trains the
+    same trajectory whether it ran inside the all-K vmap or a selected
+    slot."""
+    valid = sel >= 0
+    safe = jnp.where(valid, sel, 0)
+    cnt = task.part_count.astype(jnp.float32)
+    vm = jax.vmap(client_update, in_axes=(None, None, None, 0, 0, None, 0))
+    if cohort == "all":
+        k = task.part_count.shape[0]
+        keys = jax.vmap(lambda i: jax.random.fold_in(perm_key, i))(
+            jnp.arange(k))
+        trained = vm(params, task.train_x, task.train_y, task.part_idx,
+                     task.part_count, lr, keys)
+        w = jnp.zeros(k, jnp.float32).at[safe].add(
+            jnp.where(valid, cnt[safe], 0.0))
+    elif cohort == "selected":
+        keys = jax.vmap(lambda i: jax.random.fold_in(perm_key, i))(safe)
+        trained = vm(params, task.train_x, task.train_y, task.part_idx[safe],
+                     task.part_count[safe], lr, keys)
+        w = jnp.where(valid, cnt[safe], 0.0)
+    else:
+        raise ValueError(f"unknown cohort {cohort!r}")
+    new_params = _masked_fedavg(trained, w, use_kernel)
+    # all-padding selection (fewer candidates than S): keep the old model
+    keep = valid.any()
+    return jax.tree.map(lambda a, b: jnp.where(keep, a, b), new_params, params)
+
+
+# ---------------------------------------------------------------------------
+# The per-(policy, seed) run: one lax.scan over rounds.
+# ---------------------------------------------------------------------------
+
+def _presample(env: engine_jax.EnvArrays, scen: Scenario, seed, *,
+               n_rounds: int, n_req: int, eta, model_bits, fluctuate: bool):
+    """Everything random that is independent of the learning/bandit state,
+    drawn once outside the scan.  ``run_host_reference`` consumes the same
+    arrays, making engine and host runs common-random-number twins."""
+    k = env.mean_theta.shape[0]
+    k_cand, k_theta, k_gamma, k_pol, k_perm, k_cong, k_churn = \
+        jax.random.split(jax.random.PRNGKey(seed), 7)
+    out = {
+        "cand_masks": engine_jax._cand_masks(k_cand, n_rounds, k, n_req),
+        "pol_keys": jax.random.split(k_pol, n_rounds),
+        "perm_keys": jax.random.split(k_perm, n_rounds),
+    }
+    thr_mult = engine_jax.scenario_thr_mult(scen, env.cell_id, k_cong,
+                                            n_rounds)
+    if scen.churn_prob == 0.0:
+        # stateless resource process: pre-sample all R rounds in one shot
+        out["t_ud"], out["t_ul"] = engine_jax.sample_times(
+            env.n_samples, env.mean_theta[None, :] * thr_mult,
+            jnp.broadcast_to(env.mean_gamma, (n_rounds, k)),
+            eta, model_bits, k_theta, k_gamma, fluctuate=fluctuate)
+    else:
+        out["thr_mult"] = jnp.broadcast_to(thr_mult, (n_rounds, k))
+        out["theta_keys"] = jax.random.split(k_theta, n_rounds)
+        out["gamma_keys"] = jax.random.split(k_gamma, n_rounds)
+        out["churn_keys"] = jax.random.split(k_churn, n_rounds)
+    return out
+
+
+def _round_lrs(n_rounds: int) -> jnp.ndarray:
+    """[R] f32 paper lr schedule, computed in float64 on host at trace time
+    so the engine and the host reference use bit-identical values."""
+    return jnp.asarray(np.float32(
+        paper_lr(np.arange(n_rounds, dtype=np.float64))))
+
+
+def _scan_rounds(task: FlTask, hyper, pre: dict, *, policy: str,
+                 s_round: int, epochs: int, batch_size: int, cohort: str,
+                 use_kernel: bool, cfg: cnn.CnnConfig,
+                 scen: Scenario | None = None, eta=None, model_bits=None,
+                 fluctuate: bool = True):
+    """R learning-coupled protocol rounds as one ``lax.scan``, driven by a
+    presample dict (``_presample`` output — or externally supplied arrays,
+    which is what makes ``run_replay`` an exact common-random-number twin
+    of the host loop).  Returns ([R] round times, [R] accuracy, [R, S]
+    selections)."""
+    k = task.part_count.shape[0]
+    n_rounds = pre["cand_masks"].shape[0]
+    client_update = make_client_update(
+        functools.partial(cnn.loss_fn, cfg=cfg),
+        epochs=epochs, batch_size=batch_size)
+    evaluate = make_evaluator(functools.partial(cnn.apply, cfg=cfg))
+    select_fn = bandit_jax.make_select_fn(policy, s_round)
+    state0 = bandit_jax.BanditState.create(k)
+    lrs = _round_lrs(n_rounds)
+
+    def protocol_round(params, bstate, cand_mask, t_ud, t_ul, k_pol, k_perm,
+                       lr):
+        sel = select_fn(bstate, cand_mask, k_pol, t_ud, t_ul, hyper)
+        round_time, incs = engine_jax._schedule(sel, t_ud, t_ul)
+        safe = jnp.where(sel >= 0, sel, 0)
+        bstate = bandit_jax.observe(bstate, sel, t_ud[safe], t_ul[safe], incs)
+        params = _train_round(params, sel, task, lr, k_perm,
+                              client_update=client_update, cohort=cohort,
+                              use_kernel=use_kernel)
+        acc = evaluate(params, task.test_x, task.test_y, task.test_mask)
+        return params, bstate, round_time, acc, sel
+
+    if "t_ud" in pre:           # stateless resource process, pre-sampled
+        def step(carry, x):
+            params, bstate = carry
+            cand_mask, t_ud, t_ul, k_pol, k_perm, lr = x
+            params, bstate, rt, acc, sel = protocol_round(
+                params, bstate, cand_mask, t_ud, t_ul, k_pol, k_perm, lr)
+            return (params, bstate), (rt, acc, sel)
+
+        _, (rts, accs, sels) = jax.lax.scan(
+            step, (task.params0, state0),
+            (pre["cand_masks"], pre["t_ud"], pre["t_ul"], pre["pol_keys"],
+             pre["perm_keys"], lrs))
+        return rts, accs, sels
+
+    # churn: client means evolve between rounds, so times sample in-scan
+    def step(carry, x):
+        params, bstate, m_theta, m_gamma = carry
+        cand_mask, mult, k_t, k_g, k_pol, k_perm, k_c, lr = x
+        t_ud, t_ul = engine_jax.sample_times(task.env.n_samples,
+                                             m_theta * mult, m_gamma, eta,
+                                             model_bits, k_t, k_g,
+                                             fluctuate=fluctuate)
+        params, bstate, rt, acc, sel = protocol_round(
+            params, bstate, cand_mask, t_ud, t_ul, k_pol, k_perm, lr)
+        m_theta, m_gamma = engine_jax.churn_step(k_c, m_theta, m_gamma,
+                                                 scen.churn_prob)
+        return (params, bstate, m_theta, m_gamma), (rt, acc, sel)
+
+    carry0 = (task.params0, state0, task.env.mean_theta, task.env.mean_gamma)
+    _, (rts, accs, sels) = jax.lax.scan(
+        step, carry0,
+        (pre["cand_masks"], pre["thr_mult"], pre["theta_keys"],
+         pre["gamma_keys"], pre["pol_keys"], pre["perm_keys"],
+         pre["churn_keys"], lrs))
+    return rts, accs, sels
+
+
+def _run_fl_one(task: FlTask, model_bits, hyper, eta, seed, *, policy: str,
+                scen: Scenario, n_rounds: int, s_round: int, n_req: int,
+                fluctuate: bool, epochs: int, batch_size: int, cohort: str,
+                use_kernel: bool, cfg: cnn.CnnConfig):
+    """One (policy, seed) grid point: presample, then the round scan."""
+    pre = _presample(task.env, scen, seed, n_rounds=n_rounds, n_req=n_req,
+                     eta=eta, model_bits=model_bits, fluctuate=fluctuate)
+    return _scan_rounds(task, hyper, pre, policy=policy, s_round=s_round,
+                        epochs=epochs, batch_size=batch_size, cohort=cohort,
+                        use_kernel=use_kernel, cfg=cfg, scen=scen, eta=eta,
+                        model_bits=model_bits, fluctuate=fluctuate)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "policy", "s_round", "epochs", "batch_size", "cohort", "use_kernel",
+    "cfg"))
+def _replay_scan(task: FlTask, hyper, pre: dict, *, policy, s_round, epochs,
+                 batch_size, cohort, use_kernel, cfg):
+    return _scan_rounds(task, hyper, pre, policy=policy, s_round=s_round,
+                        epochs=epochs, batch_size=batch_size, cohort=cohort,
+                        use_kernel=use_kernel, cfg=cfg)
+
+
+def run_replay(task: FlTask, hyper, cand_masks, t_ud, t_ul, pol_keys,
+               perm_keys, *, policy: str, s_round: int,
+               epochs: int = PAPER_EPOCHS, batch_size: int = PAPER_BATCH,
+               cohort: str = "all", use_kernel: bool = False,
+               cfg: cnn.CnnConfig = cnn.CnnConfig()) -> dict:
+    """Run R learning-coupled rounds from precomputed inputs (one jit call).
+
+    cand_masks: [R, K] bool; t_ud/t_ul: [R, K]; pol_keys/perm_keys: [R]
+    PRNG keys.  Feeding it the arrays that ``run_host_reference`` reports
+    makes the two runs consume identical randomness bit-for-bit — the
+    replay-parity anchor (selections, round times and elapsed times exact;
+    accuracy exact for batchnorm-free configs, within float tolerance
+    otherwise), mirroring sim/engine_jax.run_replay.  Elapsed time is
+    accumulated on host exactly like the host loop accumulates it (XLA's
+    in-jit cumsum is a log-depth prefix scan with different association)."""
+    pre = {"cand_masks": jnp.asarray(cand_masks),
+           "t_ud": jnp.asarray(t_ud, jnp.float32),
+           "t_ul": jnp.asarray(t_ul, jnp.float32),
+           "pol_keys": jnp.asarray(pol_keys),
+           "perm_keys": jnp.asarray(perm_keys)}
+    rts, accs, sels = _replay_scan(task, hyper, pre, policy=policy,
+                                   s_round=s_round, epochs=epochs,
+                                   batch_size=batch_size, cohort=cohort,
+                                   use_kernel=use_kernel, cfg=cfg)
+    rts = np.asarray(rts)
+    return {"round_times": rts, "elapsed": np.cumsum(rts),
+            "accuracy": np.asarray(accs), "selected": np.asarray(sels)}
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "policies", "scen", "n_rounds", "s_round", "n_req", "fluctuate",
+    "epochs", "batch_size", "cohort", "use_kernel", "cfg"))
+def _run_grid(task: FlTask, model_bits, hypers, eta, seeds, *,
+              policies: tuple[str, ...], scen: Scenario, n_rounds, s_round,
+              n_req, fluctuate, epochs, batch_size, cohort, use_kernel, cfg):
+    """One jit call for the whole accuracy sweep: the policy axis is
+    unrolled statically (each entry vmaps its own selection rule over the
+    seed axis); hypers: [P], seeds: [S]."""
+    rts, accs, sels = [], [], []
+    for i, name in enumerate(policies):
+        f = functools.partial(
+            _run_fl_one, policy=name, scen=scen, n_rounds=n_rounds,
+            s_round=s_round, n_req=n_req, fluctuate=fluctuate, epochs=epochs,
+            batch_size=batch_size, cohort=cohort, use_kernel=use_kernel,
+            cfg=cfg)
+        rt, acc, sel = jax.vmap(f, in_axes=(None, None, None, None, 0))(
+            task, model_bits, hypers[i], eta, seeds)
+        rts.append(rt), accs.append(acc), sels.append(sel)
+    return jnp.stack(rts), jnp.stack(accs), jnp.stack(sels)
+
+
+# ---------------------------------------------------------------------------
+# Public sweep API.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FlSweepResult:
+    """Per-round traces for every (policy, seed) grid point, on host."""
+
+    policies: tuple[str, ...]
+    hypers: tuple[float, ...]
+    seeds: tuple[int, ...]
+    eta: float
+    round_times: np.ndarray     # [P, S, R]
+    accuracy: np.ndarray        # [P, S, R]
+    selected: np.ndarray        # [P, S, R, s_round] (-1 padded)
+
+    @property
+    def elapsed(self) -> np.ndarray:
+        """Cumulative elapsed time, [P, S, R]."""
+        return np.cumsum(self.round_times, axis=-1)
+
+    def toa(self, target: float) -> np.ndarray:
+        """ToA@target per grid point, [P, S] (inf = never reached)."""
+        return metrics.time_to_accuracy(self.elapsed, self.accuracy, target)
+
+    def summary(self, targets: tuple[float, ...] = (0.5, 0.7, 0.8)) -> str:
+        return metrics.toa_table(list(self.policies), self.elapsed,
+                                 self.accuracy, targets)
+
+
+def accuracy_sweep(scenario: Scenario | str = "paper-baseline",
+                   policies=tuple(bandit_jax.POLICY_NAMES),
+                   seeds=2,
+                   n_rounds: int = 100,
+                   n_clients: int = 100,
+                   s_round: int = 5,
+                   frac_request: float = 0.1,
+                   eta: float = 1.5,
+                   *,
+                   task: FlTask | None = None,
+                   cfg: cnn.CnnConfig = cnn.CnnConfig(),
+                   epochs: int = PAPER_EPOCHS,
+                   batch_size: int = PAPER_BATCH,
+                   cohort: str = "all",
+                   use_kernel: bool | None = None,
+                   fluctuate: bool = True,
+                   model_bits: float | None = None,
+                   **task_kwargs) -> FlSweepResult:
+    """Run the full (policy x seed) accuracy-vs-time grid as ONE jit call.
+
+    ``policies`` entries are names or (name, hyper) pairs, as in
+    sim/engine_jax.sweep.  ``task`` defaults to the paper's CIFAR task
+    built by ``make_cnn_task`` (extra ``task_kwargs`` — n_train, n_test,
+    max_samples, partition, ... — are forwarded to it).  ``model_bits``
+    defaults to the actual model size, tying the simulated upload time to
+    the model being trained.  ``use_kernel`` defaults to kernel aggregation
+    on TPU and the identical-einsum path elsewhere (CPU interpret mode runs
+    Pallas bodies op-by-op in Python).
+    """
+    scen = get_scenario(scenario) if isinstance(scenario, str) else scenario
+    if task is None:
+        task = make_cnn_task(scen, n_clients, cfg=cfg, batch_size=batch_size,
+                             **task_kwargs)
+    elif task_kwargs:
+        raise ValueError("pass either a prebuilt task or task_kwargs")
+    n_clients = task.n_clients
+    pol_names, hypers = [], []
+    for p in policies:
+        name, hyper = p if isinstance(p, tuple) else (p, None)
+        bandit_jax.make_select_fn(name, s_round)      # validates the name
+        pol_names.append(name)
+        hypers.append(float(bandit_jax.DEFAULT_HYPERS[name]
+                            if hyper is None else hyper))
+    seeds = tuple(range(seeds)) if isinstance(seeds, int) else tuple(seeds)
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if model_bits is None:
+        model_bits = 8.0 * tree_bytes(task.params0)
+
+    rts, accs, sels = _run_grid(
+        task, jnp.float32(model_bits), jnp.asarray(hypers, jnp.float32),
+        jnp.float32(eta), jnp.asarray(seeds, jnp.int32),
+        policies=tuple(pol_names), scen=scen, n_rounds=n_rounds,
+        s_round=s_round, n_req=math.ceil(n_clients * frac_request),
+        fluctuate=fluctuate, epochs=epochs, batch_size=batch_size,
+        cohort=cohort, use_kernel=bool(use_kernel), cfg=cfg)
+    return FlSweepResult(
+        policies=tuple(pol_names), hypers=tuple(hypers), seeds=seeds,
+        eta=float(eta), round_times=np.asarray(rts),
+        accuracy=np.asarray(accs), selected=np.asarray(sels))
+
+
+# ---------------------------------------------------------------------------
+# The host-loop reference twin (replay parity + benchmark baseline).
+# ---------------------------------------------------------------------------
+
+def run_host_reference(task: FlTask, *,
+                       scenario: Scenario | str = "paper-baseline",
+                       policy: str = "elementwise_ucb",
+                       hyper: float | None = None,
+                       seed: int = 0, n_rounds: int = 20, s_round: int = 5,
+                       frac_request: float = 0.1, eta: float = 1.5,
+                       cfg: cnn.CnnConfig = cnn.CnnConfig(),
+                       epochs: int = PAPER_EPOCHS,
+                       batch_size: int = PAPER_BATCH,
+                       model_bits: float | None = None,
+                       fluctuate: bool = True) -> dict:
+    """The disconnected host loop the engine replaces: LocalTrainer +
+    aggregation.fedavg + one jitted SGD step per minibatch (the pre-engine
+    CnnFlTrainer's dispatch granularity), driven by the SAME presampled
+    random stream as ``_run_fl_one``.
+
+    A host run is the engine's common-random-number twin — selections and
+    elapsed times match exactly, accuracy within float tolerance
+    (tests/test_fl_engine.py) — and the baseline bench_fl_engine times.
+    """
+    scen = get_scenario(scenario) if isinstance(scenario, str) else scenario
+    if scen.churn_prob > 0.0:
+        raise ValueError("the host reference only supports stateless "
+                         "resource processes (churn_prob == 0)")
+    k = task.n_clients
+    n_req = math.ceil(k * frac_request)
+    if hyper is None:
+        hyper = bandit_jax.DEFAULT_HYPERS[policy]
+    if model_bits is None:
+        model_bits = 8.0 * tree_bytes(task.params0)
+
+    pre = _presample(task.env, scen, seed, n_rounds=n_rounds, n_req=n_req,
+                     eta=jnp.float32(eta), model_bits=jnp.float32(model_bits),
+                     fluctuate=fluctuate)
+    select_fn = _jitted_select_fn(policy, s_round)
+    schedule = _jitted_schedule()
+    observe = _jitted_observe()
+    sgd_step = _jitted_sgd_step(cfg)
+    evaluate = _jitted_evaluator(cfg)
+    lrs = _round_lrs(n_rounds)
+    cap = task.part_idx.shape[1]
+    pos = jnp.arange(cap)
+
+    def client_update_impl(params, kk, rnd):
+        # per-epoch permutation + per-batch jitted step: the dispatch
+        # granularity of the pre-engine CnnFlTrainer, consuming the exact
+        # random stream of make_client_update (same keys, same argsort)
+        key = jax.random.fold_in(pre["perm_keys"][rnd], kk)
+        idx, count = task.part_idx[kk], int(task.part_count[kk])
+        p = params
+        for ek in jax.random.split(key, epochs):
+            r = jax.random.uniform(ek, (cap,)) + 2.0 * (pos >= count)
+            perm = idx[jnp.argsort(r)]
+            for b in range(cap // batch_size):
+                if (b + 1) * batch_size <= count:
+                    bidx = perm[b * batch_size:(b + 1) * batch_size]
+                    p = sgd_step(p, task.train_x, task.train_y, bidx,
+                                 lrs[rnd])
+        return p, float(count)
+
+    def aggregate_impl(global_params, results):
+        return fedavg([p for p, _ in results], [w for _, w in results])
+
+    trainer = LocalTrainer(task.params0, client_update_impl, aggregate_impl)
+    bstate = bandit_jax.BanditState.create(k)
+    rts, accs, sels = [], [], []
+    for r in range(n_rounds):
+        t_ud, t_ul = pre["t_ud"][r], pre["t_ul"][r]
+        sel = select_fn(bstate, pre["cand_masks"][r], pre["pol_keys"][r],
+                        t_ud, t_ul, jnp.float32(hyper))
+        rt, incs = schedule(sel, t_ud, t_ul)
+        safe = jnp.where(sel >= 0, sel, 0)
+        bstate = observe(bstate, sel, t_ud[safe], t_ul[safe], incs)
+        sel_list = [int(x) for x in np.asarray(sel) if x >= 0]
+        if sel_list:
+            trainer.train_round(sel_list)
+        else:                       # keep the lr round counter in sync
+            trainer.rounds_done += 1
+        accs.append(float(evaluate(trainer.params, task.test_x, task.test_y,
+                                   task.test_mask)))
+        rts.append(float(rt))
+        sels.append(np.asarray(sel))
+    rts = np.asarray(rts, np.float32)
+    return {"round_times": rts, "elapsed": np.cumsum(rts),
+            "accuracy": np.asarray(accs, np.float32),
+            "selected": np.stack(sels), "params": trainer.params,
+            # the consumed random stream, so run_replay can replay it
+            "pre": pre}

@@ -31,10 +31,18 @@ def _fedavg_kernel(x_ref, w_ref, out_ref):
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def fedavg_combine(stacked: jnp.ndarray, weights: jnp.ndarray,
                    interpret: bool = True) -> jnp.ndarray:
-    """stacked: [C, N] flattened client params (N padded to BLOCK);
-    weights: [C] (should sum to 1). Returns [N]."""
+    """stacked: [C, N] flattened client params for arbitrary N;
+    weights: [C] (should sum to 1). Returns [N].
+
+    N is padded up to a multiple of BLOCK internally (padding lanes are
+    zero, so their weighted sums are zero and are sliced away before
+    returning) — same auto-pad convention as kernels/ucb_score.py.
+    """
+    orig_n = stacked.shape[1]
+    pad = (-orig_n) % BLOCK
+    if pad:
+        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
     c, n = stacked.shape
-    assert n % BLOCK == 0, f"pad N={n} to a multiple of {BLOCK}"
     grid = (n // BLOCK,)
     return pl.pallas_call(
         _fedavg_kernel,
@@ -46,4 +54,4 @@ def fedavg_combine(stacked: jnp.ndarray, weights: jnp.ndarray,
         out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((n,), stacked.dtype),
         interpret=interpret,
-    )(stacked, weights)
+    )(stacked, weights)[:orig_n]

@@ -3,8 +3,8 @@
 On CPU (this container) kernels run in interpret mode — the kernel body
 executes op-by-op in Python, validating correctness against ref.py; on a
 real TPU backend set ``interpret=False`` (the default flips automatically).
-Padding to the kernels' block multiples is handled here so callers can pass
-arbitrary sizes.
+The elementwise kernels (ucb_score, fedavg) auto-pad to their block
+multiples internally, so callers can pass arbitrary sizes.
 """
 
 from __future__ import annotations
@@ -24,16 +24,6 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _pad_to(x, mult, axis):
-    n = x.shape[axis]
-    pad = (-n) % mult
-    if pad == 0:
-        return x, n
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths), n
-
-
 def ucb_scores(sums, n_sel, total, alpha: float = 1000.0,
                interpret: bool | None = None):
     interpret = _default_interpret() if interpret is None else interpret
@@ -44,9 +34,8 @@ def ucb_scores(sums, n_sel, total, alpha: float = 1000.0,
 
 def fedavg_combine(stacked, weights, interpret: bool | None = None):
     interpret = _default_interpret() if interpret is None else interpret
-    x, n = _pad_to(stacked, _fedavg.BLOCK, 1)
-    out = _fedavg.fedavg_combine(x, weights, interpret=interpret)
-    return out[:n]
+    # block padding is handled inside the kernel wrapper itself
+    return _fedavg.fedavg_combine(stacked, weights, interpret=interpret)
 
 
 def flash_attention(q, k, v, causal: bool = True, block_q: int = 512,

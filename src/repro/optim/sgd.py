@@ -18,6 +18,18 @@ class Optimizer(NamedTuple):
     update: Callable[[Any, Any, Any], tuple[Any, Any]]  # (grads, state, params)
 
 
+# The paper's Sect. IV-B round schedule, defined ONCE: the FedAvg trainer
+# (fl/cnn_trainer.py), the learning-coupled engine (fl/engine.py) and the
+# optimizer configs below all read these — they cannot drift.
+PAPER_LR0 = 0.25
+PAPER_LR_DECAY = 0.99
+
+
+def paper_lr(rnd):
+    """lr_r = 0.25 * 0.99^r.  Works on python ints and traced jnp arrays."""
+    return PAPER_LR0 * PAPER_LR_DECAY ** rnd
+
+
 def sgd(lr: float | Callable[[jnp.ndarray], jnp.ndarray], momentum: float = 0.0,
         nesterov: bool = False) -> Optimizer:
     lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
@@ -98,8 +110,8 @@ def cosine_schedule(peak_lr: float, warmup: int, total: int,
 @dataclasses.dataclass(frozen=True)
 class OptimizerConfig:
     name: str = "sgd"
-    lr: float = 0.25
-    lr_decay: float = 0.99
+    lr: float = PAPER_LR0
+    lr_decay: float = PAPER_LR_DECAY
     momentum: float = 0.0
     weight_decay: float = 0.0
     b1: float = 0.9

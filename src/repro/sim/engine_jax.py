@@ -64,6 +64,21 @@ def sample_truncated_normal(key: jnp.ndarray, mean: jnp.ndarray,
     return jnp.clip(out, jnp.maximum(mean - sigma, 1e-9), mean + sigma)
 
 
+def sample_times(n_samples: jnp.ndarray, theta_mu: jnp.ndarray,
+                 gamma_mu: jnp.ndarray, eta, model_bits, k_t, k_g,
+                 *, fluctuate: bool = True) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Eqs. (8)-(11): sample this round's (t_UD, t_UL) from mean arrays of
+    any leading shape.  The ONE resource-time formula both on-device
+    engines consume (the time-only sweep below and fl/engine.py)."""
+    if fluctuate:
+        theta = sample_truncated_normal(k_t, theta_mu, eta)
+        gamma = sample_truncated_normal(k_g, gamma_mu, eta)
+    else:
+        theta, gamma = theta_mu, gamma_mu
+    return (n_samples / jnp.maximum(gamma, 1e-9),
+            model_bits / jnp.maximum(theta, 1e-9))
+
+
 def _throughput_bps(dist_m: jnp.ndarray) -> jnp.ndarray:
     """jnp port of sim.network.throughput_bps (LTE link budget)."""
     d = jnp.maximum(dist_m, network.MIN_DIST_M)
@@ -119,7 +134,7 @@ def _switch_select(policy_idx, s_round: int):
     """A select_fn dispatching on a *traced* policy index (replay mode).
     The sampled sweep instead unrolls the policy axis statically — a vmap
     over lax.switch would evaluate every branch for every grid point."""
-    branches = [functools.partial(bandit_jax.SELECT_FNS[n], s_round=s_round)
+    branches = [bandit_jax.make_select_fn(n, s_round)
                 for n in bandit_jax.POLICY_NAMES]
 
     def select(state, cand_mask, key, t_ud, t_ul, hyper):
@@ -207,6 +222,50 @@ def _cand_masks(key: jnp.ndarray, n_rounds: int, k: int,
         jnp.arange(n_rounds)[:, None], perms].set(True)
 
 
+def scenario_thr_mult(scen: Scenario, cell_id: jnp.ndarray, key: jnp.ndarray,
+                      n_rounds: int) -> jnp.ndarray:
+    """[R, K]-broadcastable per-round multiplier on mean throughput
+    (diurnal drift + correlated cell congestion; 1.0 when both are off).
+
+    Rounds are 1-based to match ScenarioResources, whose advance() runs
+    before the first sample_times: round r uses diurnal_multiplier(r + 1).
+    Shared by the time-only sweep below and the learning-coupled engine
+    (fl/engine.py).
+    """
+    rounds = jnp.arange(1, n_rounds + 1, dtype=jnp.float32)
+    mult = jnp.ones((n_rounds, 1), jnp.float32)
+    if scen.diurnal_amp > 0.0 and scen.diurnal_period > 0:
+        mult = mult * jnp.maximum(
+            1.0 + scen.diurnal_amp
+            * jnp.sin(2.0 * math.pi * rounds / scen.diurnal_period),
+            0.05)[:, None]
+    if scen.congestion_cells > 0 and scen.congestion_sigma > 0.0:
+        cell_f = jnp.exp(scen.congestion_sigma * jax.random.normal(
+            key, (n_rounds, scen.congestion_cells)))
+        mult = mult * cell_f[:, cell_id]
+    return mult
+
+
+def churn_step(key: jnp.ndarray, mean_theta: jnp.ndarray,
+               mean_gamma: jnp.ndarray,
+               churn_prob: float) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Maybe replace one client with a fresh device (new mean resources;
+    the server's stale statistics are the point of the scenario).  Shared
+    by both engines' churn paths."""
+    k = mean_theta.shape[0]
+    kc1, kc2, kc3, kc4 = jax.random.split(key, 4)
+    do = jax.random.uniform(kc1) < churn_prob
+    j = jax.random.randint(kc2, (), 0, k)
+    r = jnp.maximum(network.CELL_RADIUS_M * jnp.sqrt(jax.random.uniform(kc3)),
+                    network.MIN_DIST_M)
+    hit = do & (jnp.arange(k) == j)
+    new_theta = jnp.where(hit, _throughput_bps(r), mean_theta)
+    new_gamma = jnp.where(
+        hit, jax.random.uniform(kc4, (), jnp.float32, CAP_LOW, CAP_HIGH),
+        mean_gamma)
+    return new_theta, new_gamma
+
+
 def _run_one(env: EnvArrays, model_bits, hyper, eta, seed,
              *, policy: str, scen: Scenario, n_rounds: int, s_round: int,
              n_req: int, fluctuate: bool):
@@ -224,41 +283,19 @@ def _run_one(env: EnvArrays, model_bits, hyper, eta, seed,
     state0 = bandit_jax.BanditState.create(k)
     k_cand, k_theta, k_gamma, k_pol, k_cong, k_churn = jax.random.split(
         jax.random.PRNGKey(seed), 6)
-    select_fn = functools.partial(bandit_jax.SELECT_FNS[policy],
-                                  s_round=s_round)
+    select_fn = bandit_jax.make_select_fn(policy, s_round)
     cand_masks = _cand_masks(k_cand, n_rounds, k, n_req)
     pol_keys = jax.random.split(k_pol, n_rounds)
-    # 1-based to match ScenarioResources, whose advance() runs before the
-    # first sample_times: round r uses diurnal_multiplier(r + 1)
-    rounds = jnp.arange(1, n_rounds + 1, dtype=jnp.float32)
 
     # per-round multiplier on mean throughput (scenario dynamics) ----------
-    thr_mult = jnp.ones((n_rounds, 1), jnp.float32)
-    if scen.diurnal_amp > 0.0 and scen.diurnal_period > 0:
-        thr_mult = thr_mult * jnp.maximum(
-            1.0 + scen.diurnal_amp
-            * jnp.sin(2.0 * math.pi * rounds / scen.diurnal_period),
-            0.05)[:, None]
-    if scen.congestion_cells > 0 and scen.congestion_sigma > 0.0:
-        cell_f = jnp.exp(scen.congestion_sigma * jax.random.normal(
-            k_cong, (n_rounds, scen.congestion_cells)))
-        thr_mult = thr_mult * cell_f[:, env.cell_id]
-
-    def sample_times(theta_mu, gamma_mu, k_t, k_g):
-        """Eqs. (8)-(11) for mean arrays of any leading shape."""
-        if fluctuate:
-            theta = sample_truncated_normal(k_t, theta_mu, eta)
-            gamma = sample_truncated_normal(k_g, gamma_mu, eta)
-        else:
-            theta, gamma = theta_mu, gamma_mu
-        return (env.n_samples / jnp.maximum(gamma, 1e-9),
-                model_bits / jnp.maximum(theta, 1e-9))
+    thr_mult = scenario_thr_mult(scen, env.cell_id, k_cong, n_rounds)
 
     if scen.churn_prob == 0.0:
         # fast path: pre-sample all R rounds of resources in one shot
         t_ud_all, t_ul_all = sample_times(
-            env.mean_theta[None, :] * thr_mult,
-            jnp.broadcast_to(env.mean_gamma, (n_rounds, k)), k_theta, k_gamma)
+            env.n_samples, env.mean_theta[None, :] * thr_mult,
+            jnp.broadcast_to(env.mean_gamma, (n_rounds, k)),
+            eta, model_bits, k_theta, k_gamma, fluctuate=fluctuate)
 
         def step(state, x):
             cand_mask, t_ud, t_ul, kp = x
@@ -277,22 +314,13 @@ def _run_one(env: EnvArrays, model_bits, hyper, eta, seed,
     def step(carry, x):
         state, mean_theta, mean_gamma = carry
         cand_mask, mult, k_t, k_g, kp, kc = x
-        t_ud, t_ul = sample_times(mean_theta * mult, mean_gamma, k_t, k_g)
+        t_ud, t_ul = sample_times(env.n_samples, mean_theta * mult,
+                                  mean_gamma, eta, model_bits, k_t, k_g,
+                                  fluctuate=fluctuate)
         state, round_time, _ = _round(state, cand_mask, t_ud, t_ul,
                                       select_fn, hyper, kp)
-        # maybe replace one client with a fresh device (new mean resources;
-        # the server's stale statistics are the point of the scenario)
-        kc1, kc2, kc3, kc4 = jax.random.split(kc, 4)
-        do = jax.random.uniform(kc1) < scen.churn_prob
-        j = jax.random.randint(kc2, (), 0, k)
-        r = jnp.maximum(network.CELL_RADIUS_M
-                        * jnp.sqrt(jax.random.uniform(kc3)),
-                        network.MIN_DIST_M)
-        hit = do & (jnp.arange(k) == j)
-        mean_theta = jnp.where(hit, _throughput_bps(r), mean_theta)
-        mean_gamma = jnp.where(
-            hit, jax.random.uniform(kc4, (), jnp.float32, CAP_LOW, CAP_HIGH),
-            mean_gamma)
+        mean_theta, mean_gamma = churn_step(kc, mean_theta, mean_gamma,
+                                            scen.churn_prob)
         return (state, mean_theta, mean_gamma), round_time
 
     carry0 = (state0, env.mean_theta, env.mean_gamma)

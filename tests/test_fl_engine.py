@@ -1,0 +1,170 @@
+"""Replay parity + invariants for the learning-coupled FL engine.
+
+Three layers, mirroring tests/test_bandit_jax.py:
+  1. the engine's vmapped/scanned protocol reproduces the classic host
+     loop (LocalTrainer + aggregation.fedavg, one client at a time) under
+     common random numbers — selections and (elapsed) round times exactly,
+     accuracy within 1e-3 round-for-round — for 2 policies x 2 scenarios;
+  2. the two cohort layouts ("all"-K vmap with zero-weight masking vs
+     gathered "selected" slots) and the two aggregation paths (Pallas
+     fedavg kernel vs jnp) produce the same trajectories;
+  3. the full (policy x seed) accuracy sweep runs as one jit call across
+     scenarios (churn, diurnal) with finite accuracy traces and monotone
+     cumulative elapsed time for every policy.
+
+The parity configs switch BatchNorm off: train-mode batch statistics
+amplify float-association noise across XLA fusion contexts (vmapped vs
+single-client compilation), which is numerical chaos, not an orchestration
+difference — with BN off the engine matches the host loop bit-for-bit.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import bandit_jax
+from repro.fl import engine, metrics
+from repro.models import cnn
+
+CFG = cnn.CnnConfig(image_size=8, channels=(8, 8), pool_after=(0,),
+                    fc_units=(16,), batchnorm=False)
+RUN = dict(s_round=3, frac_request=0.5, epochs=2, batch_size=10)
+
+
+def _task(scenario="paper-baseline", **kw):
+    kw.setdefault("n_clients", 12)
+    kw.setdefault("n_train", 600)
+    kw.setdefault("n_test", 400)
+    kw.setdefault("eval_batch", 200)
+    kw.setdefault("max_samples", 40)
+    return engine.make_cnn_task(scenario, cfg=CFG, batch_size=10, **kw)
+
+
+def _replay(task, host, policy, **kw):
+    pre = host["pre"]
+    return engine.run_replay(
+        task, np.float32(bandit_jax.DEFAULT_HYPERS[policy]),
+        pre["cand_masks"], pre["t_ud"], pre["t_ul"], pre["pol_keys"],
+        pre["perm_keys"], policy=policy, s_round=RUN["s_round"],
+        epochs=RUN["epochs"], batch_size=RUN["batch_size"], cfg=CFG, **kw)
+
+
+# ---------------------------------------------------------------------------
+# 1. replay parity vs the host loop (common random numbers)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scenario", ["paper-baseline", "diurnal-drift"])
+@pytest.mark.parametrize("policy", ["fedcs", "elementwise_ucb"])
+def test_engine_matches_host_loop(policy, scenario):
+    task = _task(scenario)
+    host = engine.run_host_reference(task, scenario=scenario, policy=policy,
+                                     seed=0, n_rounds=8, cfg=CFG, **RUN)
+    rep = _replay(task, host, policy)
+    np.testing.assert_array_equal(rep["selected"], host["selected"])
+    np.testing.assert_array_equal(rep["round_times"], host["round_times"])
+    np.testing.assert_array_equal(rep["elapsed"], host["elapsed"])
+    np.testing.assert_allclose(rep["accuracy"], host["accuracy"], atol=1e-3)
+
+
+def test_host_reference_learns():
+    """The anchor itself must be sane: accuracy climbs well above chance."""
+    task = _task()
+    host = engine.run_host_reference(task, policy="elementwise_ucb", seed=0,
+                                     n_rounds=8, cfg=CFG, **RUN)
+    assert host["accuracy"][-1] > 0.2            # 10 classes => chance 0.1
+
+
+# ---------------------------------------------------------------------------
+# 2. internal equivalences: cohort layouts, kernel aggregation
+# ---------------------------------------------------------------------------
+
+def test_cohort_layouts_equivalent():
+    """Training all K clients and masking at aggregation == training only
+    the selected slots (per-client RNG is keyed by client id)."""
+    task = _task()
+    host = engine.run_host_reference(task, policy="elementwise_ucb", seed=1,
+                                     n_rounds=6, cfg=CFG, **RUN)
+    a = _replay(task, host, "elementwise_ucb", cohort="all")
+    b = _replay(task, host, "elementwise_ucb", cohort="selected")
+    np.testing.assert_array_equal(a["selected"], b["selected"])
+    np.testing.assert_array_equal(a["round_times"], b["round_times"])
+    np.testing.assert_allclose(a["accuracy"], b["accuracy"], atol=1e-3)
+
+
+def test_kernel_aggregation_matches_jnp():
+    """The Pallas fedavg path inside the scan == the jnp combine."""
+    task = _task()
+    host = engine.run_host_reference(task, policy="fedcs", seed=2,
+                                     n_rounds=5, cfg=CFG, **RUN)
+    a = _replay(task, host, "fedcs", use_kernel=True)
+    b = _replay(task, host, "fedcs", use_kernel=False)
+    np.testing.assert_array_equal(a["selected"], b["selected"])
+    np.testing.assert_allclose(a["accuracy"], b["accuracy"], atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# 3. the one-jit-call sweep across scenarios and policies
+# ---------------------------------------------------------------------------
+
+def test_accuracy_sweep_single_jit_all_policies():
+    task = _task(n_clients=10)
+    res = engine.accuracy_sweep(task=task, seeds=2, n_rounds=4, cfg=CFG,
+                                s_round=3, frac_request=0.5, epochs=1,
+                                batch_size=10)
+    p, s, r = len(bandit_jax.POLICY_NAMES), 2, 4
+    assert res.round_times.shape == (p, s, r)
+    assert res.accuracy.shape == (p, s, r)
+    assert res.selected.shape == (p, s, r, 3)
+    assert np.all(res.round_times > 0)
+    assert np.all((res.accuracy >= 0) & (res.accuracy <= 1))
+    assert np.isfinite(res.accuracy).all()
+    # ToA plumbing: a never-reached target is inf, a trivial one is finite
+    assert np.all(np.isinf(res.toa(2.0)))
+    assert np.all(np.isfinite(res.toa(0.0)))
+    assert isinstance(res.summary(), str)
+
+
+@pytest.mark.parametrize("scenario", ["client-churn", "diurnal-drift"])
+def test_sweep_scenarios_all_policies(scenario):
+    """Satellite: churn and diurnal dynamics produce finite accuracy traces
+    and monotone cumulative elapsed time for every policy."""
+    task = _task(scenario, n_clients=10)
+    res = engine.accuracy_sweep(scenario, task=task, seeds=1, n_rounds=4,
+                                cfg=CFG, s_round=3, frac_request=0.5,
+                                epochs=1, batch_size=10)
+    assert np.isfinite(res.accuracy).all()
+    assert np.isfinite(res.round_times).all()
+    el = res.elapsed
+    assert np.all(np.diff(el, axis=-1) > 0), "elapsed time must be monotone"
+    assert np.all(el > 0)
+
+
+def test_sweep_dirichlet_task():
+    """The non-IID partition plugs straight into the engine."""
+    task = _task(partition="dirichlet", dirichlet_alpha=0.3)
+    res = engine.accuracy_sweep(task=task, policies=("elementwise_ucb",),
+                                seeds=1, n_rounds=3, cfg=CFG, s_round=3,
+                                frac_request=0.5, epochs=1, batch_size=10)
+    assert np.isfinite(res.accuracy).all()
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_time_to_accuracy():
+    elapsed = np.array([[10.0, 20.0, 30.0], [5.0, 10.0, 15.0]])
+    acc = np.array([[0.1, 0.6, 0.7], [0.2, 0.3, 0.4]])
+    toa = metrics.time_to_accuracy(elapsed, acc, 0.5)
+    assert toa[0] == 20.0 and np.isinf(toa[1])
+
+
+def test_accuracy_at_time():
+    elapsed = np.array([10.0, 20.0, 30.0])
+    acc = np.array([0.3, 0.6, 0.9])
+    got = metrics.accuracy_at_time(elapsed, acc, np.array([5.0, 10.0, 25.0, 99.0]))
+    np.testing.assert_allclose(got, [0.0, 0.3, 0.6, 0.9])
+
+
+def test_final_accuracy_window():
+    acc = np.array([0.1, 0.2, 0.4, 0.6])
+    assert metrics.final_accuracy(acc, window=2) == pytest.approx(0.5)

@@ -63,6 +63,33 @@ def test_fedavg_weighted_mean_invariant(rng):
     np.testing.assert_allclose(got, x[0], rtol=1e-5)
 
 
+@pytest.mark.parametrize("n", [1, 100, 8192, 8192 + 1])
+def test_fedavg_kernel_autopads(rng, n):
+    """The kernel itself (not just the ops wrapper) accepts any N — it pads
+    the parameter axis to BLOCK internally, like ucb_score."""
+    from repro.kernels.fedavg import fedavg_combine as kernel_fedavg
+    stacked = rnd(rng, (3, n), jnp.float32)
+    w = jnp.asarray(rng.dirichlet(np.ones(3)), jnp.float32)
+    got = kernel_fedavg(stacked, w, interpret=True)
+    assert got.shape == (n,)
+    np.testing.assert_allclose(got, ref.fedavg_ref(stacked, w), rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_fedavg_routing_parity(rng):
+    """fl.aggregation.fedavg's kernel route == its jnp tree route on a
+    real (ragged-leaf) parameter pytree."""
+    from repro.fl.aggregation import fedavg
+    trees = [{"w": rnd(rng, (37, 11), jnp.float32),
+              "b": rnd(rng, (11,), jnp.float32)} for _ in range(4)]
+    weights = [1.0, 2.0, 3.0, 4.0]
+    a = fedavg(trees, weights, use_kernel=True)
+    b = fedavg(trees, weights, use_kernel=False)
+    for ka, kb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(ka), np.asarray(kb), rtol=1e-6,
+                                   atol=1e-6)
+
+
 # --- flash attention ---------------------------------------------------------
 
 @pytest.mark.parametrize("b,s,kv,g,dh", [

@@ -213,3 +213,23 @@ def test_momentum_accelerates():
             base = traj[-1]
         else:
             assert traj[-1] < base
+
+
+# ---------------------------------------------------------------------------
+# paper CNN: init's FC sizing must agree with apply() for reduced configs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg_kw", [
+    {},                                             # the paper architecture
+    {"channels": (), "pool_after": (1, 3)},         # conv-free (FC head only)
+    {"channels": (8,), "pool_after": (0, 1)},       # pool index out of range
+    {"channels": (8, 16), "pool_after": (0,)},
+])
+def test_cnn_init_apply_shapes_agree(cfg_kw):
+    """init() must count only the pools apply() actually runs (pool indices
+    >= len(channels) never execute) when sizing the first FC layer."""
+    from repro.models import cnn
+    cfg = cnn.CnnConfig(image_size=8, fc_units=(16,), **cfg_kw)
+    params = cnn.init(jax.random.PRNGKey(0), cfg)
+    out = cnn.apply(params, jnp.zeros((2, 8, 8, 3), jnp.float32), cfg)
+    assert out.shape == (2, cfg.n_classes)

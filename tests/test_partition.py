@@ -1,0 +1,86 @@
+"""Federated partitioners: Dirichlet non-IID label skew, determinism, and
+the device-ready padded layout the learning-coupled engine consumes."""
+
+import numpy as np
+import pytest
+
+from repro.data.partition import (dirichlet_partition, iid_partition,
+                                  pad_partitions)
+from repro.data.synthetic import make_synthetic_cifar
+
+TRAIN, _ = make_synthetic_cifar(n_train=2000, n_test=10, seed=0)
+D_K = np.array([50, 120, 200, 75])
+
+
+def _label_shares(parts, n_classes=10):
+    """[K, C] per-client label distribution."""
+    out = np.zeros((len(parts), n_classes))
+    for i, p in enumerate(parts):
+        for c in range(n_classes):
+            out[i, c] = np.mean(TRAIN.y[p] == c)
+    return out
+
+
+def test_dirichlet_exact_counts_no_dups():
+    parts = dirichlet_partition(TRAIN, D_K, alpha=0.3,
+                                rng=np.random.default_rng(0))
+    for p, d in zip(parts, D_K):
+        assert len(p) == d
+        assert len(np.unique(p)) == d          # within-client no replacement
+
+
+def test_dirichlet_deterministic_under_seed():
+    a = dirichlet_partition(TRAIN, D_K, 0.3, np.random.default_rng(7))
+    b = dirichlet_partition(TRAIN, D_K, 0.3, np.random.default_rng(7))
+    for pa, pb in zip(a, b):
+        np.testing.assert_array_equal(pa, pb)
+
+
+def test_dirichlet_label_distribution_skew():
+    """Small alpha concentrates each client on few classes; large alpha
+    approaches the IID split's near-uniform label distribution."""
+    d_k = np.full(20, 150)
+    skewed = _label_shares(dirichlet_partition(
+        TRAIN, d_k, 0.1, np.random.default_rng(1)))
+    smooth = _label_shares(dirichlet_partition(
+        TRAIN, d_k, 100.0, np.random.default_rng(1)))
+    iid = _label_shares(iid_partition(TRAIN, d_k, np.random.default_rng(1)))
+    assert skewed.max(axis=1).mean() > 0.5      # dominant class per client
+    assert smooth.max(axis=1).mean() < 0.25     # near-uniform (10 classes)
+    assert abs(smooth.max(axis=1).mean() - iid.max(axis=1).mean()) < 0.1
+    # every client still has exactly its D_k samples despite the skew
+    np.testing.assert_allclose(skewed.sum(axis=1), 1.0)
+
+
+def test_dirichlet_exhausts_classes_gracefully():
+    """A request bigger than any single class redistributes instead of
+    silently under-filling."""
+    d_k = np.array([1500])                      # ~10 classes of ~200 each
+    parts = dirichlet_partition(TRAIN, d_k, alpha=0.05,
+                                rng=np.random.default_rng(3))
+    assert len(parts[0]) == 1500
+    assert len(np.unique(parts[0])) == 1500
+
+
+def test_dirichlet_rejects_oversized_request():
+    with pytest.raises(ValueError):
+        dirichlet_partition(TRAIN, np.array([len(TRAIN.y) + 1]), 0.5,
+                            np.random.default_rng(0))
+
+
+def test_pad_partitions_layout():
+    parts = [np.array([3, 1, 4]), np.array([], np.int64),
+             np.array([9, 2, 6, 5, 8])]
+    idx, count = pad_partitions(parts, cap=4)
+    assert idx.shape == (3, 4) and idx.dtype == np.int32
+    np.testing.assert_array_equal(count, [3, 0, 4])     # truncated to cap
+    np.testing.assert_array_equal(idx[0], [3, 1, 4, 3])  # pad = first index
+    np.testing.assert_array_equal(idx[1], [0, 0, 0, 0])  # empty shard
+    np.testing.assert_array_equal(idx[2], [9, 2, 6, 5])
+
+
+def test_pad_partitions_default_cap():
+    parts = [np.arange(5), np.arange(2)]
+    idx, count = pad_partitions(parts)
+    assert idx.shape == (2, 5)
+    np.testing.assert_array_equal(count, [5, 2])
