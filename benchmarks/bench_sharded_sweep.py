@@ -1,0 +1,121 @@
+"""Sharded sweep benchmark: the multi-device grid split vs the
+single-device path, plus the max-K headroom the chunked scan buys.
+
+Because the parent process (benchmarks/run.py) has already initialized jax
+with however many devices the host exposes, the measurement runs in a
+SUBPROCESS whose XLA_FLAGS force 8 virtual host devices — the same
+mechanism the CI sharded-equivalence job uses.  On virtual CPU devices the
+"speedup" is an orchestration measurement, not a hardware one (the 8
+devices share the same cores); it is recorded as informational, the real
+signal being that the sharded path exists, matches, and scales K.
+
+Results also land in ``BENCH_sharded_sweep.json`` at the repo root so the
+perf trajectory starts recording multi-device numbers.
+
+  PYTHONPATH=src python benchmarks/bench_sharded_sweep.py [--fast]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+CHILD = r"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.core import bandit_jax
+from repro.sim import engine_jax
+
+fast = __FAST__
+etas = (1.0, 1.5) if fast else (1.0, 1.5, 1.9)
+seeds = 4 if fast else 8
+rounds = 100 if fast else 500
+kw = dict(policies=tuple(bandit_jax.POLICY_NAMES), etas=etas, seeds=seeds,
+          n_rounds=rounds, n_clients=100)
+
+
+def timed(**extra):
+    engine_jax.sweep(**kw, **extra)              # compile
+    t0 = time.time()
+    engine_jax.sweep(**kw, **extra)
+    return time.time() - t0
+
+
+single_s = timed()
+sharded_s = timed(devices=8, shard="grid")
+
+# max-K headroom: fixed O(chunk*K) memory, growing K
+headroom = {}
+for k in ([1_000, 10_000] if fast else [1_000, 10_000, 100_000]):
+    t0 = time.time()
+    res = engine_jax.sweep(n_rounds=20, n_clients=k, seeds=1, etas=(1.5,),
+                           policies=("elementwise_ucb",), chunk_rounds=10,
+                           frac_request=max(0.001, min(0.1, 1000 / k)))
+    assert np.isfinite(res.round_times).all()
+    headroom[str(k)] = round(time.time() - t0, 3)
+
+print("RESULT " + json.dumps({
+    "devices": jax.device_count(),
+    "grid": len(kw["policies"]) * len(etas) * seeds,
+    "rounds": rounds,
+    "single_s": round(single_s, 3),
+    "sharded_s": round(sharded_s, 3),
+    "headroom_s_by_k": headroom,
+}))
+"""
+
+
+def _run_child(fast: bool) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(ROOT / "src")] + ([env["PYTHONPATH"]]
+                               if env.get("PYTHONPATH") else []))
+    env.pop("XLA_FLAGS", None)          # the child sets its own
+    proc = subprocess.run(
+        [sys.executable, "-c", CHILD.replace("__FAST__", repr(fast))],
+        env=env, capture_output=True, text=True, timeout=3600)
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-3000:])
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][0]
+    return json.loads(line[len("RESULT "):])
+
+
+def main(fast: bool = False) -> list[str]:
+    r = _run_child(fast)
+    rounds_total = r["grid"] * r["rounds"]
+    speedup = r["single_s"] / max(r["sharded_s"], 1e-9)
+    out = ["name,us_per_call,derived"]
+    out.append(f"sharded_sweep/single_device,"
+               f"{1e6 * r['single_s'] / rounds_total:.1f},"
+               f"total={r['single_s']:.2f}s grid={r['grid']} "
+               f"rounds={r['rounds']}")
+    out.append(f"sharded_sweep/grid_sharded,"
+               f"{1e6 * r['sharded_s'] / rounds_total:.1f},"
+               f"total={r['sharded_s']:.2f}s devices={r['devices']} "
+               f"(virtual CPU: orchestration overhead measurement)")
+    out.append(f"sharded_sweep/speedup,,x{speedup:.2f} "
+               f"(informational on virtual devices)")
+    for k, s in r["headroom_s_by_k"].items():
+        out.append(f"sharded_sweep/max_k_{k},,"
+                   f"K={k} x20 rounds chunked in {s:.2f}s")
+
+    (ROOT / "BENCH_sharded_sweep.json").write_text(
+        json.dumps(r, indent=2, sort_keys=True) + "\n")
+    return out
+
+
+if __name__ == "__main__":
+    for line in main(fast="--fast" in sys.argv):
+        print(line)

@@ -8,6 +8,8 @@ benches.  Prints ``name,us_per_call,derived`` CSV lines.
   roofline— per (arch x shape) roofline terms from the dry-run artifacts
   scale   — selection-at-scale: vectorized UCB scoring for 1e6 arms
   fl_engine — learning-coupled engine vs the classic host training loop
+  sharded — multi-device grid-sharded sweep + chunked max-K headroom
+            (subprocess with 8 forced host devices; BENCH_sharded_sweep.json)
 
 ``python -m benchmarks.run --fast`` runs reduced sizes (CI); default runs
 the full paper-scale settings.
@@ -42,7 +44,8 @@ def main() -> None:
 
     from benchmarks import (bench_accuracy, bench_convergence, bench_drift,
                             bench_fl_engine, bench_kernels, bench_roofline,
-                            bench_scale, bench_selection, bench_sweep)
+                            bench_scale, bench_selection, bench_sharded_sweep,
+                            bench_sweep)
     sections = {
         "fig1_2": bench_selection.main,
         "fig3": bench_accuracy.main,
@@ -53,6 +56,7 @@ def main() -> None:
         "scale": bench_scale.main,
         "sweep": bench_sweep.main,
         "fl_engine": bench_fl_engine.main,
+        "sharded": bench_sharded_sweep.main,
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -1,0 +1,54 @@
+"""Fail on broken relative links in README.md and docs/*.md.
+
+Checks every markdown link/image target that is not an external URL or a
+pure in-page anchor: the referenced file must exist relative to the file
+containing the link (anchors on existing files are accepted; external
+http(s)/mailto links are not fetched).
+
+  python docs/check_links.py        # exits 1 listing any broken links
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check_file(md: Path) -> list[str]:
+    errors = []
+    text = md.read_text()
+    # drop fenced code blocks: their link-like text is not navigation
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = (md.parent / path).resolve()
+        if not resolved.exists():
+            errors.append(f"{md.relative_to(ROOT)}: broken link -> {target}")
+    return errors
+
+
+def main() -> int:
+    files = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+    errors = []
+    for md in files:
+        if md.exists():
+            errors += check_file(md)
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} files: "
+          f"{'FAIL' if errors else 'all links OK'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -6,20 +6,24 @@ kernel (kernels/ucb_score.py) at large K, Algorithm-1 greedy selection as a
 ``lax.fori_loop`` (jit-able end-to-end, so the whole Client Selection step
 runs on-device even for millions of arms).
 
-All six reference policies are available behind a common mask-based
-interface
+All eight policies — the six reference policies plus the two non-stationary
+extensions (discounted and sliding-window UCB, the JAX promotion of
+``core.nonstationary``) — are available behind a common mask-based interface
 
     select_fn(state, cand_mask, key, true_ud, true_ul, hyper) -> [S] idx
 
 (``-1``-padded when fewer than S candidates exist), registered in
 ``SELECT_FNS`` / ``POLICY_IDS`` so a ``lax.switch`` over the policy axis can
 drive the on-device sweep engine (sim/engine_jax.py).  ``hyper`` is the one
-scalar hyper-parameter a policy consumes (alpha for naive UCB, beta for
-element-wise UCB; the others ignore it), traced so it can be vmapped over a
-hyper-parameter grid.
+scalar hyper-parameter a policy consumes (alpha for naive UCB, beta for the
+element-wise family; the others ignore it), traced so it can be vmapped over
+a hyper-parameter grid.  ``discounted_ucb`` additionally carries
+gamma-decayed statistics in the state itself: the engines pass
+``decay=policy_decay(name)`` to :func:`observe` each round, so the decay is
+part of the carried scan state rather than a host-side loop.
 
-Property tests (tests/test_bandit_jax.py) assert exact agreement with the
-numpy reference policies.
+Property tests (tests/test_bandit_jax.py, tests/test_nonstationary_jax.py)
+assert exact agreement with the numpy reference policies.
 """
 
 from __future__ import annotations
@@ -39,13 +43,21 @@ KERNEL_MIN_K = 4096
 
 DEFAULT_ALPHA = 1000.0
 DEFAULT_BETA = 50.0
+DEFAULT_GAMMA = 0.99    # discounted-UCB decay (core.nonstationary default)
 HIST_WINDOW = 5         # Extended-FedCS moving-average window (paper: 5)
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class BanditState:
-    """Mirrors core.bandit.ClientStats as [K] device arrays."""
+    """Mirrors core.bandit.ClientStats as [K] device arrays.
+
+    The ``disc_*`` fields are the gamma-decayed twin of the running sums
+    (core.nonstationary.DiscountedStats): every :func:`observe` call first
+    multiplies them by ``decay`` and then scatter-adds this round's
+    observations, so with ``decay=1.0`` (every stationary policy) they are
+    plain running sums and the update is a no-op semantically.
+    """
 
     n_sel: jnp.ndarray      # [K] int32
     sum_ud: jnp.ndarray     # [K] f32
@@ -57,9 +69,15 @@ class BanditState:
     hist_ud: jnp.ndarray    # [K, W] f32 ring buffers (Extended FedCS)
     hist_ul: jnp.ndarray    # [K, W] f32
     hist_n: jnp.ndarray     # [K] int32  valid ring-buffer entries
+    disc_n: jnp.ndarray     # [K] f32  gamma-discounted selection count
+    disc_ud: jnp.ndarray    # [K] f32  gamma-discounted sum of t_UD
+    disc_ul: jnp.ndarray    # [K] f32  gamma-discounted sum of t_UL
+    disc_total: jnp.ndarray  # [] f32  gamma-discounted Sigma N_k
 
     @staticmethod
     def create(k: int, window: int = HIST_WINDOW) -> "BanditState":
+        """Fresh all-zeros state for ``k`` clients (ring-buffer width
+        ``window``)."""
         z = lambda: jnp.zeros(k, jnp.float32)
         return BanditState(
             n_sel=jnp.zeros(k, jnp.int32),
@@ -69,11 +87,19 @@ class BanditState:
             hist_ud=jnp.zeros((k, window), jnp.float32),
             hist_ul=jnp.zeros((k, window), jnp.float32),
             hist_n=jnp.zeros(k, jnp.int32),
+            disc_n=z(), disc_ud=z(), disc_ul=z(),
+            disc_total=jnp.zeros((), jnp.float32),
         )
 
     @staticmethod
     def from_numpy(stats) -> "BanditState":
-        """Lift a core.bandit.ClientStats snapshot onto the device."""
+        """Lift a core.bandit.ClientStats snapshot onto the device.
+
+        ClientStats has no discounted fields (the numpy discounted policy
+        keeps its own DiscountedStats), so the ``disc_*`` twin starts cold.
+        """
+        k = len(stats.n_sel)
+        z = lambda: jnp.zeros(k, jnp.float32)
         return BanditState(
             n_sel=jnp.asarray(stats.n_sel, jnp.int32),
             sum_ud=jnp.asarray(stats.sum_ud, jnp.float32),
@@ -85,6 +111,8 @@ class BanditState:
             hist_ud=jnp.asarray(stats.hist_ud, jnp.float32),
             hist_ul=jnp.asarray(stats.hist_ul, jnp.float32),
             hist_n=jnp.asarray(stats.hist_n, jnp.int32),
+            disc_n=z(), disc_ud=z(), disc_ul=z(),
+            disc_total=jnp.zeros((), jnp.float32),
         )
 
     def replace(self, **kw) -> "BanditState":
@@ -92,6 +120,8 @@ class BanditState:
 
 
 def ucb_bonus(state: BanditState) -> jnp.ndarray:
+    """[K] UCB exploration bonus sqrt(ln ΣN / 2 N_k); BIG for never-selected
+    clients (the explore-first rule), mirroring ClientStats.ucb_bonus."""
     nf = jnp.maximum(state.n_sel.astype(jnp.float32), 1.0)
     total = jnp.maximum(state.total.astype(jnp.float32), 2.0)
     bonus = jnp.sqrt(jnp.log(total) / (2.0 * nf))
@@ -99,12 +129,22 @@ def ucb_bonus(state: BanditState) -> jnp.ndarray:
 
 
 def observe(state: BanditState, idx: jnp.ndarray, t_ud: jnp.ndarray,
-            t_ul: jnp.ndarray, tinc: jnp.ndarray) -> BanditState:
+            t_ul: jnp.ndarray, tinc: jnp.ndarray,
+            decay: float | jnp.ndarray = 1.0) -> BanditState:
     """Batch reward update for the selected clients (idx: [S]).
 
     Entries with ``idx < 0`` (the -1 padding emitted by the select fns when
     fewer than S candidates exist) are no-ops: they are routed out of bounds
     and dropped by the scatter.
+
+    ``decay`` multiplies the ``disc_*`` statistics *before* this round's
+    observations are added (core.nonstationary.DiscountedStats order):
+    1.0 for stationary policies, gamma < 1 for ``discounted_ucb`` — use
+    :func:`policy_decay` to resolve it per policy name.  A *static*
+    decay of exactly 1.0 (every stationary policy in the sweep engines,
+    where the policy is unrolled) skips the ``disc_*`` updates entirely —
+    nothing reads them — so the stationary scans don't pay three extra
+    [K] scatters per round; a traced decay (replay mode) always updates.
     """
     k = state.n_sel.shape[0]
     w = state.hist_ud.shape[1]
@@ -112,6 +152,15 @@ def observe(state: BanditState, idx: jnp.ndarray, t_ud: jnp.ndarray,
     valid = (idx >= 0) & (idx < k)
     safe = jnp.where(valid, idx, k)                 # k => out of bounds: drop
     slot = state.n_sel[jnp.clip(idx, 0, k - 1)] % w
+    disc = {}
+    if not (isinstance(decay, (int, float)) and float(decay) == 1.0):
+        disc = dict(
+            disc_n=(state.disc_n * decay).at[safe].add(1.0, mode="drop"),
+            disc_ud=(state.disc_ud * decay).at[safe].add(t_ud, mode="drop"),
+            disc_ul=(state.disc_ul * decay).at[safe].add(t_ul, mode="drop"),
+            disc_total=state.disc_total * decay
+            + valid.sum(dtype=jnp.float32),
+        )
     return state.replace(
         n_sel=state.n_sel.at[safe].add(1, mode="drop"),
         sum_ud=state.sum_ud.at[safe].add(t_ud, mode="drop"),
@@ -123,6 +172,7 @@ def observe(state: BanditState, idx: jnp.ndarray, t_ud: jnp.ndarray,
         hist_ud=state.hist_ud.at[safe, slot].set(t_ud, mode="drop"),
         hist_ul=state.hist_ul.at[safe, slot].set(t_ul, mode="drop"),
         hist_n=jnp.minimum(state.hist_n.at[safe].add(1, mode="drop"), w),
+        **disc,
     )
 
 
@@ -167,6 +217,8 @@ def _top_score(score: jnp.ndarray, cand_mask: jnp.ndarray,
 
 
 def candidate_mask(k: int, candidates: jnp.ndarray) -> jnp.ndarray:
+    """[K] bool mask from a [C] candidate-index array (the bridge from the
+    index-based public API to the mask-based select fns)."""
     return jnp.zeros(k, bool).at[candidates].set(True)
 
 
@@ -238,6 +290,40 @@ def select_oracle_mask(state, cand_mask, key, true_ud, true_ul, hyper,
     return _greedy_tinc(true_ud, true_ul, cand_mask, s_round)
 
 
+def select_discounted_mask(state, cand_mask, key, true_ud, true_ul, hyper,
+                           *, s_round: int) -> jnp.ndarray:
+    """Discounted Element-wise MAB-CS (core.nonstationary, Garivier &
+    Moulines): tau from the gamma-decayed ``disc_*`` statistics.
+
+    ``hyper`` is beta; the decay gamma lives in the state updates
+    (:func:`observe` with ``decay=policy_decay("discounted_ucb")``), not
+    here.  Thresholds and the BIG clamp mirror DiscountedStats exactly so
+    the f32 port selects identically to the float64 numpy reference.
+    """
+    n = state.disc_n
+    cold = n < 1e-2
+    mean_ud = jnp.where(cold, 0.0, state.disc_ud / jnp.maximum(n, 1e-3))
+    mean_ul = jnp.where(cold, 0.0, state.disc_ul / jnp.maximum(n, 1e-3))
+    eff_total = jnp.maximum(state.disc_total, 2.0)
+    b = jnp.sqrt(jnp.log(eff_total) / (2.0 * jnp.maximum(n, 1e-3)))
+    bonus = jnp.where(cold, BIG, jnp.minimum(b, BIG))
+    return _greedy_tinc(mean_ud / hyper - bonus, mean_ul / hyper - bonus,
+                        cand_mask, s_round)
+
+
+def select_sliding_mask(state, cand_mask, key, true_ud, true_ul, hyper,
+                        *, s_round: int) -> jnp.ndarray:
+    """Sliding-window Element-wise MAB-CS (core.nonstationary): tau from the
+    last-W-observation ring-buffer means with the global UCB bonus.
+    ``hyper`` is beta."""
+    n = jnp.maximum(state.hist_n, 1).astype(jnp.float32)
+    mean_ud = state.hist_ud.sum(1) / n
+    mean_ul = state.hist_ul.sum(1) / n
+    bonus = ucb_bonus(state)
+    return _greedy_tinc(mean_ud / hyper - bonus, mean_ul / hyper - bonus,
+                        cand_mask, s_round)
+
+
 SELECT_FNS: dict[str, Callable] = {
     "fedcs": select_fedcs_mask,
     "extended_fedcs": select_extended_fedcs_mask,
@@ -245,6 +331,8 @@ SELECT_FNS: dict[str, Callable] = {
     "elementwise_ucb": select_elementwise_mask,
     "random": select_random_mask,
     "oracle": select_oracle_mask,
+    "discounted_ucb": select_discounted_mask,
+    "sliding_ucb": select_sliding_mask,
 }
 POLICY_NAMES: list[str] = list(SELECT_FNS)
 POLICY_IDS: dict[str, int] = {n: i for i, n in enumerate(POLICY_NAMES)}
@@ -252,7 +340,15 @@ POLICY_IDS: dict[str, int] = {n: i for i, n in enumerate(POLICY_NAMES)}
 DEFAULT_HYPERS: dict[str, float] = {
     "fedcs": 0.0, "extended_fedcs": 0.0, "naive_ucb": DEFAULT_ALPHA,
     "elementwise_ucb": DEFAULT_BETA, "random": 0.0, "oracle": 0.0,
+    "discounted_ucb": DEFAULT_BETA, "sliding_ucb": DEFAULT_BETA,
 }
+
+
+def policy_decay(policy: str) -> float:
+    """Per-round decay of the state's ``disc_*`` statistics for ``policy``:
+    DEFAULT_GAMMA for ``discounted_ucb``, 1.0 (no decay) otherwise.  The
+    engines thread this into every :func:`observe` call."""
+    return DEFAULT_GAMMA if policy == "discounted_ucb" else 1.0
 
 
 def make_select_fn(policy: str, s_round: int) -> Callable:
@@ -293,6 +389,8 @@ def select_naive(state: BanditState, candidates: jnp.ndarray,
 
 def select_fedcs(state: BanditState, candidates: jnp.ndarray,
                  s_round: int) -> jnp.ndarray:
+    """FedCS over candidate indices ([C] ints): last observed latency is
+    the estimate.  Returns [s_round] selected indices, -1 padded."""
     mask = candidate_mask(state.n_sel.shape[0], candidates)
     return select_fedcs_mask(state, mask, None, None, None, 0.0,
                              s_round=s_round)
@@ -300,6 +398,8 @@ def select_fedcs(state: BanditState, candidates: jnp.ndarray,
 
 def select_extended_fedcs(state: BanditState, candidates: jnp.ndarray,
                           s_round: int) -> jnp.ndarray:
+    """Extended FedCS over candidate indices ([C] ints): last-W moving
+    average as the estimate.  Returns [s_round] indices, -1 padded."""
     mask = candidate_mask(state.n_sel.shape[0], candidates)
     return select_extended_fedcs_mask(state, mask, None, None, None, 0.0,
                                       s_round=s_round)
@@ -307,6 +407,8 @@ def select_extended_fedcs(state: BanditState, candidates: jnp.ndarray,
 
 def select_random(state: BanditState, candidates: jnp.ndarray,
                   s_round: int, key: jnp.ndarray) -> jnp.ndarray:
+    """Uniform S-subset of the candidates ([C] ints; ``key``: PRNG key).
+    Returns [s_round] indices, -1 padded."""
     mask = candidate_mask(state.n_sel.shape[0], candidates)
     return select_random_mask(state, mask, key, None, None, 0.0,
                               s_round=s_round)
@@ -315,6 +417,8 @@ def select_random(state: BanditState, candidates: jnp.ndarray,
 def select_oracle(state: BanditState, candidates: jnp.ndarray,
                   s_round: int, true_ud: jnp.ndarray,
                   true_ul: jnp.ndarray) -> jnp.ndarray:
+    """Clairvoyant greedy on this round's true [K] times (upper bound).
+    Returns [s_round] indices, -1 padded."""
     mask = candidate_mask(state.n_sel.shape[0], candidates)
     return select_oracle_mask(state, mask, None, true_ud, true_ul, 0.0,
                               s_round=s_round)

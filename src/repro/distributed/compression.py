@@ -23,6 +23,8 @@ import jax.numpy as jnp
 # ---------------------------------------------------------------------------
 
 def quantize_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Absmax-quantize ``x`` to int8: returns (q int8 same shape, scalar
+    f32 scale) with x ~= q * scale."""
     absmax = jnp.max(jnp.abs(x)) + 1e-12
     scale = absmax / 127.0
     q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
@@ -30,10 +32,12 @@ def quantize_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
 
 
 def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of ``quantize_int8``: q int8 * scalar scale -> f32."""
     return q.astype(jnp.float32) * scale
 
 
 def int8_roundtrip(x: jnp.ndarray) -> jnp.ndarray:
+    """Quantize-dequantize ``x`` (what the receiver reconstructs)."""
     q, s = quantize_int8(x)
     return dequantize_int8(q, s).astype(x.dtype)
 
@@ -44,6 +48,8 @@ def int8_roundtrip(x: jnp.ndarray) -> jnp.ndarray:
 
 def topk_compress(x: jnp.ndarray, ratio: float
                   ) -> tuple[jnp.ndarray, jnp.ndarray, int]:
+    """Keep the k = ratio * n largest-|.| entries of ``x``: returns
+    ([k] values, [k] flat indices, k)."""
     flat = x.reshape(-1)
     k = max(1, int(flat.shape[0] * ratio))
     vals, idx = jax.lax.top_k(jnp.abs(flat), k)
@@ -52,6 +58,8 @@ def topk_compress(x: jnp.ndarray, ratio: float
 
 def topk_decompress(vals: jnp.ndarray, idx: jnp.ndarray, n: int,
                     shape) -> jnp.ndarray:
+    """Scatter ([k] values, [k] flat indices) back into a dense ``shape``
+    array of ``n`` elements (zeros elsewhere)."""
     return jnp.zeros((n,), vals.dtype).at[idx].set(vals).reshape(shape)
 
 
@@ -64,6 +72,7 @@ def topk_roundtrip(x: jnp.ndarray, ratio: float
 
 
 def tree_int8_roundtrip(tree):
+    """``int8_roundtrip`` applied leaf-wise to a pytree."""
     return jax.tree.map(int8_roundtrip, tree)
 
 

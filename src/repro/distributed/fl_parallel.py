@@ -29,6 +29,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.distributed import compression
+from repro.distributed.sharding import cohort_axes
 from repro.optim.sgd import Optimizer
 
 
@@ -38,7 +39,11 @@ from repro.optim.sgd import Optimizer
 
 def make_local_steps(loss_fn: Callable, opt: Optimizer, n_steps: int):
     """Returns f(params, opt_state, batches) -> (params, opt_state, loss)
-    for ONE client; batches: [n_steps, ...] stacked minibatches."""
+    for ONE client — ``n_steps`` local SGD steps as an inner scan.
+
+    ``loss_fn(params, batch) -> scalar``; ``batches`` is a pytree whose
+    leaves are [n_steps, ...] stacked minibatches; the returned loss is the
+    mean over the local steps."""
 
     def local(params, opt_state, batches):
         def step(carry, batch):
@@ -59,7 +64,7 @@ def make_local_steps(loss_fn: Callable, opt: Optimizer, n_steps: int):
 # ---------------------------------------------------------------------------
 
 def _cohort_axes(mesh: Mesh) -> tuple[str, ...]:
-    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return cohort_axes(mesh)      # shared with the sharding layer
 
 
 def fedavg_across_cohorts(stacked_params: Any, weights: jnp.ndarray,

@@ -1,4 +1,29 @@
-"""PartitionSpec rules for every model family.
+"""Mesh/shard_map orchestration layer + PartitionSpec rules.
+
+Two halves, one device model:
+
+1. **Sweep-grid orchestration** (``sweep_mesh`` / ``shard_vmapped`` /
+   ``shard_leading`` / ``pad_leading``) — the generic layer both on-device
+   engines (sim/engine_jax.py, fl/engine.py) use to scale past one device.
+   A sweep is an embarrassingly parallel vmap over a flattened grid axis
+   (policy is unrolled statically; eta x seed / seed is the vmapped axis),
+   so the layer offers two shardings:
+
+     * ``shard="grid"``  — split the *grid* axis over a 1-D mesh with
+       ``shard_map`` (each device runs the identical vmapped program on its
+       slice; results concatenate, so sharded == single-device exactly);
+     * ``shard="clients"`` — commit the *client* axis (K) of the per-client
+       state (UCB stats, ring buffers, resource draws, data shards) to a
+       ``NamedSharding`` and let GSPMD partition the whole scan — the
+       large-K layout, where one device cannot hold [R, K] draws or K model
+       replicas.
+
+   CPU hosts get the same code path via
+   ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (see
+   ``host_device_flag``), which is how CI proves sharded == single-device.
+
+2. **Model-param PartitionSpec rules** (``param_specs`` and friends) for
+   every model family in models/.
 
 Rules are matched against flattened param paths and applied *from the right*
 (trailing dims), so stacked leading layer/group dims are automatically
@@ -25,14 +50,110 @@ TP choices (Megatron-style):
 from __future__ import annotations
 
 import re
-from typing import Any
+from typing import TYPE_CHECKING, Any, Callable, Sequence
 
 import jax
+import numpy as np
+from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.launch.mesh import batch_axes
-from repro.models.layers import LMConfig
 
+if TYPE_CHECKING:       # annotation-only: keep this module import-light
+    from repro.models.layers import LMConfig
+
+
+# ---------------------------------------------------------------------------
+# Sweep-grid orchestration (the layer both on-device engines build on).
+# ---------------------------------------------------------------------------
+
+SWEEP_AXIS = "grid"     # the one mesh axis of a sweep mesh
+
+
+def host_device_flag(n: int) -> str:
+    """The XLA flag that splits a CPU host into ``n`` virtual devices.
+
+    Must be in ``XLA_FLAGS`` *before* jax initializes — tests/CI export it,
+    subprocess harnesses inject it into the child environment.
+    """
+    return f"--xla_force_host_platform_device_count={n}"
+
+
+def sweep_mesh(n_devices: int | None = None,
+               axis_name: str = SWEEP_AXIS) -> Mesh:
+    """1-D mesh over the first ``n_devices`` devices (all, when None).
+
+    The single axis carries either the sweep-grid dimension
+    (``shard_vmapped``) or the client dimension (``shard_leading``),
+    depending on which sharding mode the caller picks.
+    """
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else int(n_devices)
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"asked for {n} devices, have {len(devs)}")
+    return Mesh(np.asarray(devs[:n]), (axis_name,))
+
+
+def pad_leading(x: np.ndarray, multiple: int) -> np.ndarray:
+    """Edge-pad the leading axis up to a multiple of ``multiple`` (host-side;
+    shard_map needs the global axis divisible by the mesh).  The caller
+    slices the padded tail off the result."""
+    pad = (-x.shape[0]) % multiple
+    if pad == 0:
+        return x
+    return np.concatenate([x, np.repeat(x[-1:], pad, axis=0)], axis=0)
+
+
+def shard_vmapped(vm_fn: Callable, mesh: Mesh,
+                  sharded_argnums: Sequence[int],
+                  axis_name: str = SWEEP_AXIS) -> Callable:
+    """Split an already-vmapped function's leading grid axis over ``mesh``.
+
+    ``vm_fn(*args)`` must be a vmapped computation whose args listed in
+    ``sharded_argnums`` carry the grid as their leading axis (divisible by
+    the mesh size — see ``pad_leading``) and whose outputs all carry it as
+    theirs; every other arg is replicated.  Each device runs the identical
+    per-grid-point program on its slice with no collectives, so the result
+    equals the unsharded vmap exactly.
+    """
+    sharded = set(sharded_argnums)
+
+    def wrapper(*args):
+        in_specs = tuple(P(axis_name) if i in sharded else P()
+                         for i in range(len(args)))
+        return shard_map(vm_fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=P(axis_name), check_rep=False)(*args)
+    return wrapper
+
+
+def shard_leading(tree: Any, mesh: Mesh,
+                  axis_name: str = SWEEP_AXIS) -> Any:
+    """Commit every array leaf of ``tree`` to ``mesh`` with its *leading*
+    dim sharded over ``axis_name`` (rest replicated) — the client-axis
+    layout: [K]-leading state/data arrays spread over devices, GSPMD
+    partitions the consuming scan around them."""
+    def leaf(x):
+        spec = P(axis_name, *([None] * (np.ndim(x) - 1)))
+        return jax.device_put(x, NamedSharding(mesh, spec))
+    return jax.tree.map(leaf, tree)
+
+
+def replicate(tree: Any, mesh: Mesh) -> Any:
+    """Commit every array leaf of ``tree`` to ``mesh`` fully replicated."""
+    return jax.tree.map(
+        lambda x: jax.device_put(x, NamedSharding(mesh, P())), tree)
+
+
+def cohort_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Mesh axes that enumerate FL cohorts in the pod runtime: ``pod`` (when
+    present) and ``data`` — shared by fl_parallel.py and the dry-run
+    tooling."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# Model-param PartitionSpec rules.
+# ---------------------------------------------------------------------------
 
 def _path_str(path) -> str:
     parts = []
@@ -116,6 +237,9 @@ def _param_rules(fsdp: bool) -> list[tuple[str, tuple | None]]:
 
 
 def spec_for_leaf(path_s: str, shape: tuple, rules, mesh: Mesh) -> P:
+    """Resolve one param leaf (flattened ``path_s``, ``shape``) against the
+    rule table: first regex match wins, the spec is applied from the right
+    and divisibility-guarded; no match => replicated."""
     for pat, right in rules:
         if re.search(pat, path_s):
             if right is None:
@@ -124,8 +248,14 @@ def spec_for_leaf(path_s: str, shape: tuple, rules, mesh: Mesh) -> P:
     return P()          # default: replicated (safe)
 
 
-def param_specs(param_shapes: Any, cfg: LMConfig, mesh: Mesh,
+def param_specs(param_shapes: Any, cfg: "LMConfig", mesh: Mesh,
                 fsdp: bool = False) -> Any:
+    """PartitionSpec tree for a model's params.
+
+    ``param_shapes`` is any pytree of shaped leaves (``jax.eval_shape``
+    output or real params); ``fsdp`` additionally shards one non-TP dim
+    over the data axis.  Returns a spec tree mirroring ``param_shapes``
+    (see the module docstring for the rule table)."""
     rules = _param_rules(fsdp)
 
     def leaf(path, x):
@@ -134,7 +264,7 @@ def param_specs(param_shapes: Any, cfg: LMConfig, mesh: Mesh,
     return jax.tree_util.tree_map_with_path(leaf, param_shapes)
 
 
-def cache_specs(cache_shapes: Any, cfg: LMConfig, mesh: Mesh) -> Any:
+def cache_specs(cache_shapes: Any, cfg: "LMConfig", mesh: Mesh) -> Any:
     """Decode caches / recurrent states (see module docstring)."""
     ba = batch_axes(mesh)
 
@@ -162,6 +292,9 @@ def cache_specs(cache_shapes: Any, cfg: LMConfig, mesh: Mesh) -> Any:
 
 
 def batch_specs(input_shapes: dict, mesh: Mesh) -> dict:
+    """Input-batch specs: leading (batch) dim over the data/pod axes,
+    everything else replicated.  ``input_shapes`` is a pytree of shaped
+    leaves; returns a mirroring spec tree."""
     ba = batch_axes(mesh)
 
     def leaf(path, x):
@@ -189,5 +322,7 @@ def opt_specs(opt_shapes: Any, pspecs: Any) -> Any:
 
 
 def to_named(tree_specs: Any, mesh: Mesh) -> Any:
+    """Bind a PartitionSpec tree to ``mesh``: every P leaf becomes a
+    ``NamedSharding`` usable as jit in/out shardings or device_put target."""
     return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
                         is_leaf=lambda x: isinstance(x, P))

@@ -40,6 +40,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import warnings
 from typing import Any
 
 import jax
@@ -50,6 +51,7 @@ from jax.flatten_util import ravel_pytree
 from repro.core import bandit_jax
 from repro.data.partition import (dirichlet_partition, iid_partition,
                                   pad_partitions)
+from repro.distributed import sharding as dist_sharding
 from repro.data.synthetic import make_synthetic_cifar
 from repro.fl import metrics
 from repro.fl.aggregation import fedavg
@@ -310,30 +312,33 @@ def _train_round(params, sel, task: FlTask, lr, perm_key, *, client_update,
 def _presample(env: engine_jax.EnvArrays, scen: Scenario, seed, *,
                n_rounds: int, n_req: int, eta, model_bits, fluctuate: bool):
     """Everything random that is independent of the learning/bandit state,
-    drawn once outside the scan.  ``run_host_reference`` consumes the same
-    arrays, making engine and host runs common-random-number twins."""
+    drawn once for a *stateless* resource process (churn samples in-scan
+    and is engine-only; ``run_host_reference`` rejects it upstream).  The
+    host loop consumes these arrays, making host and engine runs
+    common-random-number twins.
+
+    All draws derive from per-round keys (one split per round off each
+    root, same split order as ``_scan_rounds_chunked``), so the chunked
+    scan regenerates the *identical* stream from the keys alone.
+    """
+    assert scen.churn_prob == 0.0, "churn presampling lives in the scan"
     k = env.mean_theta.shape[0]
-    k_cand, k_theta, k_gamma, k_pol, k_perm, k_cong, k_churn = \
+    k_cand, k_theta, k_gamma, k_pol, k_perm, k_cong, _k_churn = \
         jax.random.split(jax.random.PRNGKey(seed), 7)
-    out = {
+    rounds = jnp.arange(1, n_rounds + 1, dtype=jnp.int32)
+    thr_mult = engine_jax.scenario_thr_mult(
+        scen, env.cell_id, jax.random.split(k_cong, n_rounds), rounds)
+    t_ud, t_ul = engine_jax.sample_times_rounds(
+        env.n_samples, env.mean_theta[None, :] * thr_mult,
+        jnp.broadcast_to(env.mean_gamma, (n_rounds, k)),
+        eta, model_bits, jax.random.split(k_theta, n_rounds),
+        jax.random.split(k_gamma, n_rounds), fluctuate=fluctuate)
+    return {
         "cand_masks": engine_jax._cand_masks(k_cand, n_rounds, k, n_req),
         "pol_keys": jax.random.split(k_pol, n_rounds),
         "perm_keys": jax.random.split(k_perm, n_rounds),
+        "t_ud": t_ud, "t_ul": t_ul,
     }
-    thr_mult = engine_jax.scenario_thr_mult(scen, env.cell_id, k_cong,
-                                            n_rounds)
-    if scen.churn_prob == 0.0:
-        # stateless resource process: pre-sample all R rounds in one shot
-        out["t_ud"], out["t_ul"] = engine_jax.sample_times(
-            env.n_samples, env.mean_theta[None, :] * thr_mult,
-            jnp.broadcast_to(env.mean_gamma, (n_rounds, k)),
-            eta, model_bits, k_theta, k_gamma, fluctuate=fluctuate)
-    else:
-        out["thr_mult"] = jnp.broadcast_to(thr_mult, (n_rounds, k))
-        out["theta_keys"] = jax.random.split(k_theta, n_rounds)
-        out["gamma_keys"] = jax.random.split(k_gamma, n_rounds)
-        out["churn_keys"] = jax.random.split(k_churn, n_rounds)
-    return out
 
 
 def _round_lrs(n_rounds: int) -> jnp.ndarray:
@@ -343,86 +348,174 @@ def _round_lrs(n_rounds: int) -> jnp.ndarray:
         paper_lr(np.arange(n_rounds, dtype=np.float64))))
 
 
-def _scan_rounds(task: FlTask, hyper, pre: dict, *, policy: str,
-                 s_round: int, epochs: int, batch_size: int, cohort: str,
-                 use_kernel: bool, cfg: cnn.CnnConfig,
-                 scen: Scenario | None = None, eta=None, model_bits=None,
-                 fluctuate: bool = True):
-    """R learning-coupled protocol rounds as one ``lax.scan``, driven by a
-    presample dict (``_presample`` output — or externally supplied arrays,
-    which is what makes ``run_replay`` an exact common-random-number twin
-    of the host loop).  Returns ([R] round times, [R] accuracy, [R, S]
-    selections)."""
-    k = task.part_count.shape[0]
-    n_rounds = pre["cand_masks"].shape[0]
+def _make_protocol_round(task: FlTask, hyper, *, policy: str, s_round: int,
+                         epochs: int, batch_size: int, cohort: str,
+                         use_kernel: bool, cfg: cnn.CnnConfig):
+    """The ONE learning-coupled round — select, schedule, observe, train,
+    evaluate — shared by the single-shot and chunked scans.
+
+    Returns ``protocol_round(params, bstate, cand_mask, t_ud, t_ul, k_pol,
+    k_perm, lr) -> (params, bstate, round_time, accuracy, sel)``.
+    """
     client_update = make_client_update(
         functools.partial(cnn.loss_fn, cfg=cfg),
         epochs=epochs, batch_size=batch_size)
     evaluate = make_evaluator(functools.partial(cnn.apply, cfg=cfg))
     select_fn = bandit_jax.make_select_fn(policy, s_round)
-    state0 = bandit_jax.BanditState.create(k)
-    lrs = _round_lrs(n_rounds)
+    decay = bandit_jax.policy_decay(policy)
 
     def protocol_round(params, bstate, cand_mask, t_ud, t_ul, k_pol, k_perm,
                        lr):
         sel = select_fn(bstate, cand_mask, k_pol, t_ud, t_ul, hyper)
         round_time, incs = engine_jax._schedule(sel, t_ud, t_ul)
         safe = jnp.where(sel >= 0, sel, 0)
-        bstate = bandit_jax.observe(bstate, sel, t_ud[safe], t_ul[safe], incs)
+        bstate = bandit_jax.observe(bstate, sel, t_ud[safe], t_ul[safe],
+                                    incs, decay=decay)
         params = _train_round(params, sel, task, lr, k_perm,
                               client_update=client_update, cohort=cohort,
                               use_kernel=use_kernel)
         acc = evaluate(params, task.test_x, task.test_y, task.test_mask)
         return params, bstate, round_time, acc, sel
 
-    if "t_ud" in pre:           # stateless resource process, pre-sampled
-        def step(carry, x):
-            params, bstate = carry
-            cand_mask, t_ud, t_ul, k_pol, k_perm, lr = x
-            params, bstate, rt, acc, sel = protocol_round(
-                params, bstate, cand_mask, t_ud, t_ul, k_pol, k_perm, lr)
-            return (params, bstate), (rt, acc, sel)
+    return protocol_round
 
-        _, (rts, accs, sels) = jax.lax.scan(
-            step, (task.params0, state0),
-            (pre["cand_masks"], pre["t_ud"], pre["t_ul"], pre["pol_keys"],
-             pre["perm_keys"], lrs))
-        return rts, accs, sels
 
-    # churn: client means evolve between rounds, so times sample in-scan
+def _scan_rounds(task: FlTask, hyper, pre: dict, *, policy: str,
+                 s_round: int, epochs: int, batch_size: int, cohort: str,
+                 use_kernel: bool, cfg: cnn.CnnConfig):
+    """R learning-coupled protocol rounds as one flat ``lax.scan`` over a
+    presample dict of externally supplied arrays — the ``run_replay`` path
+    (exact common-random-number twin of the host loop; stateless resource
+    processes only, like the host loop itself).  The sweep instead runs
+    through ``_scan_rounds_chunked``, which regenerates the same stream
+    from keys and also covers churn.  Returns ([R] round times, [R]
+    accuracy, [R, S] selections)."""
+    k = task.part_count.shape[0]
+    n_rounds = pre["cand_masks"].shape[0]
+    protocol_round = _make_protocol_round(
+        task, hyper, policy=policy, s_round=s_round, epochs=epochs,
+        batch_size=batch_size, cohort=cohort, use_kernel=use_kernel, cfg=cfg)
+    state0 = bandit_jax.BanditState.create(k)
+    lrs = _round_lrs(n_rounds)
+
     def step(carry, x):
-        params, bstate, m_theta, m_gamma = carry
-        cand_mask, mult, k_t, k_g, k_pol, k_perm, k_c, lr = x
-        t_ud, t_ul = engine_jax.sample_times(task.env.n_samples,
-                                             m_theta * mult, m_gamma, eta,
-                                             model_bits, k_t, k_g,
-                                             fluctuate=fluctuate)
+        params, bstate = carry
+        cand_mask, t_ud, t_ul, k_pol, k_perm, lr = x
         params, bstate, rt, acc, sel = protocol_round(
             params, bstate, cand_mask, t_ud, t_ul, k_pol, k_perm, lr)
-        m_theta, m_gamma = engine_jax.churn_step(k_c, m_theta, m_gamma,
-                                                 scen.churn_prob)
-        return (params, bstate, m_theta, m_gamma), (rt, acc, sel)
+        return (params, bstate), (rt, acc, sel)
 
-    carry0 = (task.params0, state0, task.env.mean_theta, task.env.mean_gamma)
     _, (rts, accs, sels) = jax.lax.scan(
-        step, carry0,
-        (pre["cand_masks"], pre["thr_mult"], pre["theta_keys"],
-         pre["gamma_keys"], pre["pol_keys"], pre["perm_keys"],
-         pre["churn_keys"], lrs))
+        step, (task.params0, state0),
+        (pre["cand_masks"], pre["t_ud"], pre["t_ul"], pre["pol_keys"],
+         pre["perm_keys"], lrs))
     return rts, accs, sels
+
+
+def _scan_rounds_chunked(task: FlTask, hyper, seed, *, policy: str,
+                         scen: Scenario, n_rounds: int, chunk_rounds: int,
+                         s_round: int, n_req: int, eta, model_bits,
+                         fluctuate: bool, epochs: int, batch_size: int,
+                         cohort: str, use_kernel: bool, cfg: cnn.CnnConfig,
+                         client_mesh=None):
+    """The chunked twin of ``_presample`` + ``_scan_rounds``: an outer scan
+    over R/c chunks regenerates each chunk's candidates/multipliers/draws
+    from the same per-round keys ``_presample`` would use, so peak memory
+    is O(c·K) while the consumed random stream — and therefore every
+    selection, round time, and accuracy — is identical to the single-shot
+    path.  ``client_mesh`` pins the [K] axes to a device mesh (large-K
+    layout)."""
+    k = task.part_count.shape[0]
+    c = int(chunk_rounds)
+    if n_rounds % c:
+        raise ValueError(f"n_rounds={n_rounds} not divisible by "
+                         f"chunk_rounds={c}")
+    n_chunks = n_rounds // c
+    roots = jax.random.split(jax.random.PRNGKey(seed), 7)
+    names = ("cand", "theta", "gamma", "pol", "perm", "cong", "churn")
+    keys = {n: engine_jax._per_round_keys(r, n_rounds, n_chunks)
+            for n, r in zip(names, roots)}
+    rounds = jnp.arange(1, n_rounds + 1, dtype=jnp.int32).reshape(
+        n_chunks, c)
+    lrs = _round_lrs(n_rounds).reshape(n_chunks, c)
+    protocol_round = _make_protocol_round(
+        task, hyper, policy=policy, s_round=s_round, epochs=epochs,
+        batch_size=batch_size, cohort=cohort, use_kernel=use_kernel, cfg=cfg)
+    state0 = engine_jax._client_constrain(bandit_jax.BanditState.create(k),
+                                          client_mesh)
+
+    def chunk_body(carry, xs):
+        params, bstate, m_theta, m_gamma = carry
+        kk, rr, lr_c = xs
+        cand_masks = engine_jax._client_constrain(
+            engine_jax._cand_masks_from_keys(kk["cand"], k, n_req),
+            client_mesh, client_dim=1)
+        thr_mult = engine_jax.scenario_thr_mult(scen, task.env.cell_id,
+                                                kk["cong"], rr)
+
+        if scen.churn_prob == 0.0:
+            t_ud, t_ul = engine_jax._client_constrain(
+                engine_jax.sample_times_rounds(
+                    task.env.n_samples, m_theta[None, :] * thr_mult,
+                    jnp.broadcast_to(m_gamma, (c, k)), eta, model_bits,
+                    kk["theta"], kk["gamma"], fluctuate=fluctuate),
+                client_mesh, client_dim=1)
+
+            def step(carry2, x):
+                params, bstate = carry2
+                cand_mask, t_ud_r, t_ul_r, k_pol, k_perm, lr = x
+                params, bstate, rt, acc, sel = protocol_round(
+                    params, bstate, cand_mask, t_ud_r, t_ul_r, k_pol,
+                    k_perm, lr)
+                return (params, bstate), (rt, acc, sel)
+
+            (params, bstate), ys = jax.lax.scan(
+                step, (params, bstate),
+                (cand_masks, t_ud, t_ul, kk["pol"], kk["perm"], lr_c))
+            return (params, bstate, m_theta, m_gamma), ys
+
+        def step(carry2, x):
+            params, bstate, m_th, m_ga = carry2
+            cand_mask, mult, k_t, k_g, k_pol, k_perm, k_c, lr = x
+            t_ud, t_ul = engine_jax.sample_times(
+                task.env.n_samples, m_th * mult, m_ga, eta, model_bits,
+                k_t, k_g, fluctuate=fluctuate)
+            params, bstate, rt, acc, sel = protocol_round(
+                params, bstate, cand_mask, t_ud, t_ul, k_pol, k_perm, lr)
+            m_th, m_ga = engine_jax.churn_step(k_c, m_th, m_ga,
+                                               scen.churn_prob)
+            return (params, bstate, m_th, m_ga), (rt, acc, sel)
+
+        carry2, ys = jax.lax.scan(
+            step, (params, bstate, m_theta, m_gamma),
+            (cand_masks, thr_mult, kk["theta"], kk["gamma"], kk["pol"],
+             kk["perm"], kk["churn"], lr_c))
+        return carry2, ys
+
+    carry0 = (task.params0, state0, task.env.mean_theta,
+              task.env.mean_gamma)
+    _, (rts, accs, sels) = jax.lax.scan(chunk_body, carry0,
+                                        (keys, rounds, lrs))
+    return (rts.reshape(n_rounds), accs.reshape(n_rounds),
+            sels.reshape(n_rounds, s_round))
 
 
 def _run_fl_one(task: FlTask, model_bits, hyper, eta, seed, *, policy: str,
                 scen: Scenario, n_rounds: int, s_round: int, n_req: int,
                 fluctuate: bool, epochs: int, batch_size: int, cohort: str,
-                use_kernel: bool, cfg: cnn.CnnConfig):
-    """One (policy, seed) grid point: presample, then the round scan."""
-    pre = _presample(task.env, scen, seed, n_rounds=n_rounds, n_req=n_req,
-                     eta=eta, model_bits=model_bits, fluctuate=fluctuate)
-    return _scan_rounds(task, hyper, pre, policy=policy, s_round=s_round,
-                        epochs=epochs, batch_size=batch_size, cohort=cohort,
-                        use_kernel=use_kernel, cfg=cfg, scen=scen, eta=eta,
-                        model_bits=model_bits, fluctuate=fluctuate)
+                use_kernel: bool, cfg: cnn.CnnConfig,
+                chunk_rounds: int | None = None, client_mesh=None):
+    """One (policy, seed) grid point, always through the chunked scan —
+    the default is one chunk spanning the whole run, which consumes the
+    stream ``_presample`` would draw bit-for-bit (per-round keys), so
+    ``run_host_reference`` stays a replay twin of every chunk size."""
+    return _scan_rounds_chunked(
+        task, hyper, seed, policy=policy, scen=scen, n_rounds=n_rounds,
+        chunk_rounds=n_rounds if chunk_rounds is None else chunk_rounds,
+        s_round=s_round, n_req=n_req, eta=eta, model_bits=model_bits,
+        fluctuate=fluctuate, epochs=epochs, batch_size=batch_size,
+        cohort=cohort, use_kernel=use_kernel, cfg=cfg,
+        client_mesh=client_mesh)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -466,24 +559,56 @@ def run_replay(task: FlTask, hyper, cand_masks, t_ud, t_ul, pol_keys,
 
 @functools.partial(jax.jit, static_argnames=(
     "policies", "scen", "n_rounds", "s_round", "n_req", "fluctuate",
-    "epochs", "batch_size", "cohort", "use_kernel", "cfg"))
+    "epochs", "batch_size", "cohort", "use_kernel", "cfg", "chunk_rounds",
+    "mesh", "shard"), donate_argnames=("seeds",))
 def _run_grid(task: FlTask, model_bits, hypers, eta, seeds, *,
               policies: tuple[str, ...], scen: Scenario, n_rounds, s_round,
-              n_req, fluctuate, epochs, batch_size, cohort, use_kernel, cfg):
+              n_req, fluctuate, epochs, batch_size, cohort, use_kernel, cfg,
+              chunk_rounds=None, mesh=None, shard="grid"):
     """One jit call for the whole accuracy sweep: the policy axis is
     unrolled statically (each entry vmaps its own selection rule over the
-    seed axis); hypers: [P], seeds: [S]."""
+    seed axis); hypers: [P], seeds: [S], donated.
+
+    ``mesh``/``shard`` (static): ``shard="grid"`` splits the seed axis over
+    the mesh with shard_map (seeds pre-padded by the caller to a mesh-size
+    multiple); ``shard="clients"`` pins the client axis K of the bandit
+    state, resource draws and data shards to the mesh for GSPMD
+    partitioning (the caller commits the task arrays accordingly — see
+    ``shard_task_for_clients``).  ``chunk_rounds`` routes every grid point
+    through the chunked scan.
+    """
+    client_mesh = mesh if (mesh is not None and shard == "clients") else None
     rts, accs, sels = [], [], []
     for i, name in enumerate(policies):
         f = functools.partial(
             _run_fl_one, policy=name, scen=scen, n_rounds=n_rounds,
             s_round=s_round, n_req=n_req, fluctuate=fluctuate, epochs=epochs,
             batch_size=batch_size, cohort=cohort, use_kernel=use_kernel,
-            cfg=cfg)
-        rt, acc, sel = jax.vmap(f, in_axes=(None, None, None, None, 0))(
-            task, model_bits, hypers[i], eta, seeds)
+            cfg=cfg, chunk_rounds=chunk_rounds, client_mesh=client_mesh)
+        g = jax.vmap(f, in_axes=(None, None, None, None, 0))
+        if mesh is not None and shard == "grid":
+            g = dist_sharding.shard_vmapped(g, mesh, sharded_argnums=(4,))
+        rt, acc, sel = g(task, model_bits, hypers[i], eta, seeds)
         rts.append(rt), accs.append(acc), sels.append(sel)
     return jnp.stack(rts), jnp.stack(accs), jnp.stack(sels)
+
+
+def shard_task_for_clients(task: FlTask, mesh) -> FlTask:
+    """Commit a task's per-client arrays (env resources, partition index /
+    count — everything [K]-leading) to ``mesh`` sharded over the client
+    axis, and the global data/model replicated: the large-K input layout
+    for ``accuracy_sweep(..., shard="clients")``."""
+    return dataclasses.replace(
+        task,
+        env=dist_sharding.shard_leading(task.env, mesh),
+        part_idx=dist_sharding.shard_leading(task.part_idx, mesh),
+        part_count=dist_sharding.shard_leading(task.part_count, mesh),
+        params0=dist_sharding.replicate(task.params0, mesh),
+        train_x=dist_sharding.replicate(task.train_x, mesh),
+        train_y=dist_sharding.replicate(task.train_y, mesh),
+        test_x=dist_sharding.replicate(task.test_x, mesh),
+        test_y=dist_sharding.replicate(task.test_y, mesh),
+        test_mask=dist_sharding.replicate(task.test_mask, mesh))
 
 
 # ---------------------------------------------------------------------------
@@ -533,6 +658,9 @@ def accuracy_sweep(scenario: Scenario | str = "paper-baseline",
                    use_kernel: bool | None = None,
                    fluctuate: bool = True,
                    model_bits: float | None = None,
+                   devices=None,
+                   shard: str = "grid",
+                   chunk_rounds: int | None = None,
                    **task_kwargs) -> FlSweepResult:
     """Run the full (policy x seed) accuracy-vs-time grid as ONE jit call.
 
@@ -544,8 +672,17 @@ def accuracy_sweep(scenario: Scenario | str = "paper-baseline",
     the model being trained.  ``use_kernel`` defaults to kernel aggregation
     on TPU and the identical-einsum path elsewhere (CPU interpret mode runs
     Pallas bodies op-by-op in Python).
+
+    Scaling knobs — same semantics as sim/engine_jax.sweep: ``devices``
+    (None / int / "all") picks the mesh, ``shard`` picks what the mesh
+    splits ("grid" = the seed axis via shard_map, exactly single-device
+    results; "clients" = the client axis K of state, draws and data shards
+    via GSPMD), ``chunk_rounds`` caps peak memory at O(chunk_rounds · K)
+    per grid point without changing the consumed random stream.
     """
     scen = get_scenario(scenario) if isinstance(scenario, str) else scenario
+    if shard not in ("grid", "clients"):
+        raise ValueError(f"unknown shard mode {shard!r}")
     if task is None:
         task = make_cnn_task(scen, n_clients, cfg=cfg, batch_size=batch_size,
                              **task_kwargs)
@@ -565,17 +702,30 @@ def accuracy_sweep(scenario: Scenario | str = "paper-baseline",
     if model_bits is None:
         model_bits = 8.0 * tree_bytes(task.params0)
 
-    rts, accs, sels = _run_grid(
-        task, jnp.float32(model_bits), jnp.asarray(hypers, jnp.float32),
-        jnp.float32(eta), jnp.asarray(seeds, jnp.int32),
-        policies=tuple(pol_names), scen=scen, n_rounds=n_rounds,
-        s_round=s_round, n_req=math.ceil(n_clients * frac_request),
-        fluctuate=fluctuate, epochs=epochs, batch_size=batch_size,
-        cohort=cohort, use_kernel=bool(use_kernel), cfg=cfg)
+    mesh = engine_jax.resolve_sweep_mesh(devices)
+    g_seeds = np.asarray(seeds, np.int32)
+    if mesh is not None and shard == "grid":
+        g_seeds = dist_sharding.pad_leading(g_seeds, mesh.size)
+    if mesh is not None and shard == "clients":
+        task = shard_task_for_clients(task, mesh)
+
+    with warnings.catch_warnings():
+        warnings.filterwarnings(            # CPU cannot donate; expected
+            "ignore", message="Some donated buffers were not usable")
+        rts, accs, sels = _run_grid(
+            task, jnp.float32(model_bits), jnp.asarray(hypers, jnp.float32),
+            jnp.float32(eta), jnp.asarray(g_seeds),
+            policies=tuple(pol_names), scen=scen, n_rounds=n_rounds,
+            s_round=s_round, n_req=math.ceil(n_clients * frac_request),
+            fluctuate=fluctuate, epochs=epochs, batch_size=batch_size,
+            cohort=cohort, use_kernel=bool(use_kernel), cfg=cfg,
+            chunk_rounds=chunk_rounds, mesh=mesh, shard=shard)
+    n_seeds = len(seeds)
     return FlSweepResult(
         policies=tuple(pol_names), hypers=tuple(hypers), seeds=seeds,
-        eta=float(eta), round_times=np.asarray(rts),
-        accuracy=np.asarray(accs), selected=np.asarray(sels))
+        eta=float(eta), round_times=np.asarray(rts)[:, :n_seeds],
+        accuracy=np.asarray(accs)[:, :n_seeds],
+        selected=np.asarray(sels)[:, :n_seeds])
 
 
 # ---------------------------------------------------------------------------
@@ -654,7 +804,8 @@ def run_host_reference(task: FlTask, *,
                         t_ud, t_ul, jnp.float32(hyper))
         rt, incs = schedule(sel, t_ud, t_ul)
         safe = jnp.where(sel >= 0, sel, 0)
-        bstate = observe(bstate, sel, t_ud[safe], t_ul[safe], incs)
+        bstate = observe(bstate, sel, t_ud[safe], t_ul[safe], incs,
+                         jnp.float32(bandit_jax.policy_decay(policy)))
         sel_list = [int(x) for x in np.asarray(sel) if x >= 0]
         if sel_list:
             trainer.train_round(sel_list)

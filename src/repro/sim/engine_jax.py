@@ -20,6 +20,16 @@ common-random-number comparisons.
 Scenario dynamics (sim/scenarios.py) — correlated cell congestion, diurnal
 throughput drift, client churn — run inside the scan body, mirroring
 ``ScenarioResources``.
+
+Scaling (distributed/sharding.py): ``sweep(..., devices=N)`` splits the
+flattened grid axis over an N-device mesh with ``shard_map`` (bitwise the
+same per grid point), ``shard="clients"`` instead commits the client axis K
+of the per-client state to a ``NamedSharding`` for GSPMD partitioning
+(large-K layout), and ``chunk_rounds=c`` caps peak memory at O(c·K) per
+grid point by pre-sampling rounds in chunks inside an outer scan.  All
+randomness derives from per-round keys, so the chunked scan consumes
+*exactly* the stream of the unchunked one — tests/test_sharded_sweep.py
+pins all three equivalences.
 """
 
 from __future__ import annotations
@@ -27,12 +37,14 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bandit_jax
+from repro.distributed import sharding as dist_sharding
 from repro.sim import network
 from repro.sim.resources import PAPER_MODEL_BITS
 from repro.sim.scenarios import (CAP_HIGH, CAP_LOW, Scenario, get_scenario)
@@ -67,9 +79,12 @@ def sample_truncated_normal(key: jnp.ndarray, mean: jnp.ndarray,
 def sample_times(n_samples: jnp.ndarray, theta_mu: jnp.ndarray,
                  gamma_mu: jnp.ndarray, eta, model_bits, k_t, k_g,
                  *, fluctuate: bool = True) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Eqs. (8)-(11): sample this round's (t_UD, t_UL) from mean arrays of
-    any leading shape.  The ONE resource-time formula both on-device
-    engines consume (the time-only sweep below and fl/engine.py)."""
+    """Eqs. (8)-(11): sample ONE round's (t_UD, t_UL).
+
+    ``theta_mu``/``gamma_mu``: [K] mean throughput / capability; ``k_t`` /
+    ``k_g``: this round's PRNG keys.  Returns ([K] t_UD, [K] t_UL) — the
+    ONE resource-time formula both on-device engines consume (the time-only
+    sweep below and fl/engine.py)."""
     if fluctuate:
         theta = sample_truncated_normal(k_t, theta_mu, eta)
         gamma = sample_truncated_normal(k_g, gamma_mu, eta)
@@ -77,6 +92,27 @@ def sample_times(n_samples: jnp.ndarray, theta_mu: jnp.ndarray,
         theta, gamma = theta_mu, gamma_mu
     return (n_samples / jnp.maximum(gamma, 1e-9),
             model_bits / jnp.maximum(theta, 1e-9))
+
+
+def sample_times_rounds(n_samples: jnp.ndarray, theta_mu: jnp.ndarray,
+                        gamma_mu: jnp.ndarray, eta, model_bits,
+                        theta_keys: jnp.ndarray, gamma_keys: jnp.ndarray,
+                        *, fluctuate: bool = True
+                        ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Vectorized ``sample_times`` over a block of rounds with per-round
+    keys.
+
+    ``theta_mu``/``gamma_mu``: [R', K] per-round means; ``theta_keys`` /
+    ``gamma_keys``: [R'] per-round PRNG keys.  Returns ([R', K], [R', K]).
+    Per-round keys (rather than one key for the whole block) make a chunked
+    scan consume the identical random stream as a single-shot pre-sample —
+    the property the chunk-equivalence tests pin down.
+    """
+    one = functools.partial(sample_times, n_samples, eta=eta,
+                            model_bits=model_bits, fluctuate=fluctuate)
+    return jax.vmap(lambda mu_t, mu_g, kt, kg: one(
+        theta_mu=mu_t, gamma_mu=mu_g, k_t=kt, k_g=kg))(
+            theta_mu, gamma_mu, theta_keys, gamma_keys)
 
 
 def _throughput_bps(dist_m: jnp.ndarray) -> jnp.ndarray:
@@ -143,13 +179,16 @@ def _switch_select(policy_idx, s_round: int):
     return select
 
 
-def _round(state, cand_mask, t_ud, t_ul, select_fn, hyper, key):
-    """One protocol round given this round's candidates and true times."""
+def _round(state, cand_mask, t_ud, t_ul, select_fn, hyper, key, decay=1.0):
+    """One protocol round given this round's candidates and true times.
+    ``decay`` is the per-round discount of the state's decayed statistics
+    (bandit_jax.policy_decay)."""
     sel = select_fn(state, cand_mask, key, t_ud, t_ul, hyper)
     round_time, incs = _schedule(sel, t_ud, t_ul)
     valid = sel >= 0
     safe = jnp.where(valid, sel, 0)
-    state = bandit_jax.observe(state, sel, t_ud[safe], t_ul[safe], incs)
+    state = bandit_jax.observe(state, sel, t_ud[safe], t_ul[safe], incs,
+                               decay=decay)
     return state, round_time, sel
 
 
@@ -172,6 +211,9 @@ def run_replay(policy_idx: jnp.ndarray, hyper: jnp.ndarray,
     state0 = bandit_jax.BanditState.create(k)
 
     select_fn = _switch_select(policy_idx, s_round)
+    # traced-policy twin of bandit_jax.policy_decay
+    decay = jnp.where(policy_idx == bandit_jax.POLICY_IDS["discounted_ucb"],
+                      bandit_jax.DEFAULT_GAMMA, 1.0)
 
     def step(carry, x):
         state, key = carry
@@ -180,7 +222,7 @@ def run_replay(policy_idx: jnp.ndarray, hyper: jnp.ndarray,
         state, rt, sel = _round(state, cand_mask,
                                 t_ud.astype(jnp.float32),
                                 t_ul.astype(jnp.float32),
-                                select_fn, hyper, sub)
+                                select_fn, hyper, sub, decay=decay)
         return (state, key), (rt, sel)
 
     (state, _), (rts, sels) = jax.lax.scan(
@@ -213,35 +255,46 @@ class EnvArrays:
         )
 
 
+def _cand_masks_from_keys(keys: jnp.ndarray, k: int,
+                          n_req: int) -> jnp.ndarray:
+    """[R', K] bool Resource-Request candidate subsets from per-round keys
+    (``keys``: [R'] PRNG keys, one per round)."""
+    r = keys.shape[0]
+    perms = jax.vmap(lambda kk: jax.random.permutation(kk, k)[:n_req])(keys)
+    return jnp.zeros((r, k), bool).at[
+        jnp.arange(r)[:, None], perms].set(True)
+
+
 def _cand_masks(key: jnp.ndarray, n_rounds: int, k: int,
                 n_req: int) -> jnp.ndarray:
     """[R, K] bool: every round's Resource-Request candidate subset."""
-    perms = jax.vmap(lambda kk: jax.random.permutation(kk, k)[:n_req])(
-        jax.random.split(key, n_rounds))
-    return jnp.zeros((n_rounds, k), bool).at[
-        jnp.arange(n_rounds)[:, None], perms].set(True)
+    return _cand_masks_from_keys(jax.random.split(key, n_rounds), k, n_req)
 
 
-def scenario_thr_mult(scen: Scenario, cell_id: jnp.ndarray, key: jnp.ndarray,
-                      n_rounds: int) -> jnp.ndarray:
-    """[R, K]-broadcastable per-round multiplier on mean throughput
+def scenario_thr_mult(scen: Scenario, cell_id: jnp.ndarray,
+                      keys: jnp.ndarray,
+                      rounds: jnp.ndarray) -> jnp.ndarray:
+    """[R', K]-broadcastable per-round multiplier on mean throughput
     (diurnal drift + correlated cell congestion; 1.0 when both are off).
 
-    Rounds are 1-based to match ScenarioResources, whose advance() runs
-    before the first sample_times: round r uses diurnal_multiplier(r + 1).
+    ``keys``: [R'] per-round PRNG keys (congestion draws — per-round so a
+    chunked scan replays the identical stream); ``rounds``: [R'] 1-based
+    round indices, matching ScenarioResources whose advance() runs before
+    the first sample_times (round r uses diurnal_multiplier(r + 1)).
     Shared by the time-only sweep below and the learning-coupled engine
     (fl/engine.py).
     """
-    rounds = jnp.arange(1, n_rounds + 1, dtype=jnp.float32)
-    mult = jnp.ones((n_rounds, 1), jnp.float32)
+    r = rounds.shape[0]
+    rounds = rounds.astype(jnp.float32)
+    mult = jnp.ones((r, 1), jnp.float32)
     if scen.diurnal_amp > 0.0 and scen.diurnal_period > 0:
         mult = mult * jnp.maximum(
             1.0 + scen.diurnal_amp
             * jnp.sin(2.0 * math.pi * rounds / scen.diurnal_period),
             0.05)[:, None]
     if scen.congestion_cells > 0 and scen.congestion_sigma > 0.0:
-        cell_f = jnp.exp(scen.congestion_sigma * jax.random.normal(
-            key, (n_rounds, scen.congestion_cells)))
+        cell_f = jnp.exp(scen.congestion_sigma * jax.vmap(
+            lambda kk: jax.random.normal(kk, (scen.congestion_cells,)))(keys))
         mult = mult * cell_f[:, cell_id]
     return mult
 
@@ -266,86 +319,154 @@ def churn_step(key: jnp.ndarray, mean_theta: jnp.ndarray,
     return new_theta, new_gamma
 
 
+def _per_round_keys(root: jnp.ndarray, n_rounds: int,
+                    n_chunks: int) -> jnp.ndarray:
+    """Split ``root`` into one key per round, grouped [n_chunks, c, ...] for
+    the outer chunk scan (c = n_rounds // n_chunks)."""
+    keys = jax.random.split(root, n_rounds)
+    return keys.reshape((n_chunks, n_rounds // n_chunks) + keys.shape[1:])
+
+
+def _client_constrain(tree, client_mesh, client_dim: int = 0):
+    """Pin the client axis (dim ``client_dim``) of every leaf of ``tree``
+    to the 1-D client mesh; leaves of lower rank (the scalar counters) stay
+    replicated.  No-op when ``client_mesh`` is None."""
+    if client_mesh is None:
+        return tree
+    axis = client_mesh.axis_names[0]
+
+    def leaf(x):
+        if x.ndim <= client_dim:
+            return x
+        spec = [None] * x.ndim
+        spec[client_dim] = axis
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(
+                client_mesh, jax.sharding.PartitionSpec(*spec)))
+    return jax.tree.map(leaf, tree)
+
+
 def _run_one(env: EnvArrays, model_bits, hyper, eta, seed,
              *, policy: str, scen: Scenario, n_rounds: int, s_round: int,
-             n_req: int, fluctuate: bool):
+             n_req: int, fluctuate: bool, chunk_rounds: int | None = None,
+             client_mesh=None):
     """One grid point: the full protocol over rounds.  Returns [R] round
     times.  ``policy`` and the scenario dynamics are static — the sweep
     unrolls the policy axis so each compiled branch runs only its own
     selection rule, and switched-off dynamics are compiled away entirely.
 
-    Without churn the per-round resources have no sequential dependence, so
+    The round axis runs as an outer scan over chunks of ``chunk_rounds``
+    rounds (default: one chunk = the whole run).  Each chunk pre-samples
     everything random — candidates, diurnal/congestion multipliers, the
-    truncated-normal draws — is pre-sampled as [R, ...] arrays in a few
-    fused ops, leaving only select/schedule/observe inside the scan.
+    truncated-normal draws — as [c, ...] arrays in a few fused ops, leaving
+    only select/schedule/observe in the inner scan; peak memory is O(c·K)
+    per grid point instead of O(R·K).  All draws come from per-round keys,
+    so every chunk size consumes the identical random stream.  With churn
+    the client means evolve between rounds and times sample per round
+    inside the inner scan instead.
+
+    ``client_mesh`` (static) pins the [K]-leading state and draws to a 1-D
+    device mesh so GSPMD partitions the client axis (large-K layout).
     """
     k = env.mean_theta.shape[0]
-    state0 = bandit_jax.BanditState.create(k)
+    c = n_rounds if chunk_rounds is None else int(chunk_rounds)
+    if n_rounds % c:
+        raise ValueError(f"n_rounds={n_rounds} not divisible by "
+                         f"chunk_rounds={c}")
+    n_chunks = n_rounds // c
+    state0 = _client_constrain(bandit_jax.BanditState.create(k), client_mesh)
     k_cand, k_theta, k_gamma, k_pol, k_cong, k_churn = jax.random.split(
         jax.random.PRNGKey(seed), 6)
     select_fn = bandit_jax.make_select_fn(policy, s_round)
-    cand_masks = _cand_masks(k_cand, n_rounds, k, n_req)
-    pol_keys = jax.random.split(k_pol, n_rounds)
+    decay = bandit_jax.policy_decay(policy)
 
-    # per-round multiplier on mean throughput (scenario dynamics) ----------
-    thr_mult = scenario_thr_mult(scen, env.cell_id, k_cong, n_rounds)
+    keys = {name: _per_round_keys(root, n_rounds, n_chunks)
+            for name, root in [("cand", k_cand), ("theta", k_theta),
+                               ("gamma", k_gamma), ("pol", k_pol),
+                               ("cong", k_cong), ("churn", k_churn)]}
+    rounds = jnp.arange(1, n_rounds + 1, dtype=jnp.int32).reshape(
+        n_chunks, c)
 
-    if scen.churn_prob == 0.0:
-        # fast path: pre-sample all R rounds of resources in one shot
-        t_ud_all, t_ul_all = sample_times(
-            env.n_samples, env.mean_theta[None, :] * thr_mult,
-            jnp.broadcast_to(env.mean_gamma, (n_rounds, k)),
-            eta, model_bits, k_theta, k_gamma, fluctuate=fluctuate)
-
-        def step(state, x):
-            cand_mask, t_ud, t_ul, kp = x
-            state, round_time, _ = _round(state, cand_mask, t_ud, t_ul,
-                                          select_fn, hyper, kp)
-            return state, round_time
-        _, round_times = jax.lax.scan(
-            step, state0, (cand_masks, t_ud_all, t_ul_all, pol_keys))
-        return round_times
-
-    # churn path: client means evolve between rounds, sample inside the scan
-    theta_keys = jax.random.split(k_theta, n_rounds)
-    gamma_keys = jax.random.split(k_gamma, n_rounds)
-    churn_keys = jax.random.split(k_churn, n_rounds)
-
-    def step(carry, x):
+    def chunk_body(carry, xs):
         state, mean_theta, mean_gamma = carry
-        cand_mask, mult, k_t, k_g, kp, kc = x
-        t_ud, t_ul = sample_times(env.n_samples, mean_theta * mult,
-                                  mean_gamma, eta, model_bits, k_t, k_g,
-                                  fluctuate=fluctuate)
-        state, round_time, _ = _round(state, cand_mask, t_ud, t_ul,
-                                      select_fn, hyper, kp)
-        mean_theta, mean_gamma = churn_step(kc, mean_theta, mean_gamma,
-                                            scen.churn_prob)
-        return (state, mean_theta, mean_gamma), round_time
+        kk, rr = xs
+        cand_masks = _client_constrain(
+            _cand_masks_from_keys(kk["cand"], k, n_req), client_mesh,
+            client_dim=1)
+        thr_mult = scenario_thr_mult(scen, env.cell_id, kk["cong"], rr)
+
+        if scen.churn_prob == 0.0:
+            # stateless resources: pre-sample the whole chunk in one shot
+            t_ud, t_ul = _client_constrain(sample_times_rounds(
+                env.n_samples, mean_theta[None, :] * thr_mult,
+                jnp.broadcast_to(mean_gamma, (c, k)), eta, model_bits,
+                kk["theta"], kk["gamma"], fluctuate=fluctuate), client_mesh,
+                client_dim=1)
+
+            def step(state, x):
+                cand_mask, t_ud_r, t_ul_r, kp = x
+                state, round_time, _ = _round(state, cand_mask, t_ud_r,
+                                              t_ul_r, select_fn, hyper, kp,
+                                              decay=decay)
+                return state, round_time
+            state, round_times = jax.lax.scan(
+                step, state, (cand_masks, t_ud, t_ul, kk["pol"]))
+            return (state, mean_theta, mean_gamma), round_times
+
+        # churn: client means evolve between rounds, sample in the scan
+        def step(carry2, x):
+            state, m_theta, m_gamma = carry2
+            cand_mask, mult, k_t, k_g, kp, kc = x
+            t_ud, t_ul = sample_times(env.n_samples, m_theta * mult,
+                                      m_gamma, eta, model_bits, k_t, k_g,
+                                      fluctuate=fluctuate)
+            state, round_time, _ = _round(state, cand_mask, t_ud, t_ul,
+                                          select_fn, hyper, kp, decay=decay)
+            m_theta, m_gamma = churn_step(kc, m_theta, m_gamma,
+                                          scen.churn_prob)
+            return (state, m_theta, m_gamma), round_time
+
+        carry2, round_times = jax.lax.scan(
+            step, (state, mean_theta, mean_gamma),
+            (cand_masks, thr_mult, kk["theta"], kk["gamma"], kk["pol"],
+             kk["churn"]))
+        return carry2, round_times
 
     carry0 = (state0, env.mean_theta, env.mean_gamma)
-    _, round_times = jax.lax.scan(
-        step, carry0, (cand_masks, thr_mult, theta_keys, gamma_keys,
-                       pol_keys, churn_keys))
-    return round_times
+    _, round_times = jax.lax.scan(chunk_body, carry0, (keys, rounds))
+    return round_times.reshape(n_rounds)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "policies", "scen", "n_rounds", "s_round", "n_req", "fluctuate"))
+    "policies", "scen", "n_rounds", "s_round", "n_req", "fluctuate",
+    "chunk_rounds", "mesh", "shard"), donate_argnames=("eta", "seed"))
 def _run_grid(env: EnvArrays, model_bits, hypers, eta, seed,
               *, policies: tuple[str, ...], scen: Scenario, n_rounds,
-              s_round, n_req, fluctuate):
+              s_round, n_req, fluctuate, chunk_rounds=None, mesh=None,
+              shard="grid"):
     """One jit call for the whole sweep: the policy axis is unrolled
     statically (each entry vmaps its own selection rule over the flattened
-    [E*S] eta/seed axes); hypers: [P], eta/seed: [E*S]."""
+    [E*S] eta/seed axes); hypers: [P], eta/seed: [E*S], donated.
+
+    ``mesh``/``shard`` (static): with ``shard="grid"`` each policy's vmap
+    runs inside ``shard_map`` with the [E*S] axis split over the mesh (the
+    caller pads it to a mesh-size multiple); with ``shard="clients"`` the
+    vmap stays global and the [K] axis of the per-client state is pinned to
+    the mesh for GSPMD partitioning.
+    """
+    client_mesh = mesh if (mesh is not None and shard == "clients") else None
     out = []
     for i, name in enumerate(policies):
         f = functools.partial(_run_one, policy=name, scen=scen,
                               n_rounds=n_rounds, s_round=s_round,
-                              n_req=n_req, fluctuate=fluctuate)
+                              n_req=n_req, fluctuate=fluctuate,
+                              chunk_rounds=chunk_rounds,
+                              client_mesh=client_mesh)
         g = jax.vmap(f, in_axes=(None, None, None, 0, 0))
+        if mesh is not None and shard == "grid":
+            g = dist_sharding.shard_vmapped(g, mesh, sharded_argnums=(3, 4))
         out.append(g(env, model_bits, hypers[i], eta, seed))
-    return jnp.stack(out)          # [P, E*S, R]
+    return jnp.stack(out)          # [P, E*S(_padded), R]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -368,6 +489,17 @@ class SweepResult:
         return self.elapsed.mean(axis=-1)
 
 
+def resolve_sweep_mesh(devices) -> "jax.sharding.Mesh | None":
+    """Resolve a ``devices`` argument (None/0/1 => single-device path, an
+    int => that many devices, "all" => every device) into a 1-D sweep mesh
+    or None.  Shared by sweep() and fl/engine.accuracy_sweep()."""
+    if devices in (None, 0, 1):
+        return None
+    mesh = dist_sharding.sweep_mesh(
+        None if devices == "all" else int(devices))
+    return None if mesh.size == 1 else mesh
+
+
 def sweep(scenario: Scenario | str = "paper-baseline",
           policies=tuple(bandit_jax.POLICY_NAMES),
           etas=(1.0, 1.5, 1.9),
@@ -378,15 +510,37 @@ def sweep(scenario: Scenario | str = "paper-baseline",
           frac_request: float = 0.1,
           model_bits: float = PAPER_MODEL_BITS,
           env_seed: int = 0,
-          fluctuate: bool = True) -> SweepResult:
+          fluctuate: bool = True,
+          *,
+          devices=None,
+          shard: str = "grid",
+          chunk_rounds: int | None = None) -> SweepResult:
     """Run the full (policy x eta x seed) grid as ONE jit call.
 
     ``policies`` entries are names or (name, hyper) pairs — the hyper is the
     policy's scalar knob (alpha / beta), so hyper-parameter sweeps just list
     the same policy several times.  ``seeds`` is an int (=> range) or an
     explicit sequence.
+
+    Scaling knobs (see distributed/sharding.py and docs/architecture.md):
+
+    ``devices``
+        None/0/1 => single device; an int n => shard over the first n
+        devices; "all" => every device.
+    ``shard``
+        "grid" (default) splits the flattened eta x seed axis over the
+        devices with shard_map — same results as single-device, exactly;
+        "clients" pins the client axis K of the per-client state to the
+        mesh instead (the large-K layout, GSPMD-partitioned).
+    ``chunk_rounds``
+        Pre-sample rounds in chunks of this size inside an outer scan,
+        capping peak memory at O(chunk_rounds * K) per grid point; must
+        divide ``n_rounds``.  Any chunk size consumes the identical
+        per-round random stream, so results do not change.
     """
     scenario = get_scenario(scenario) if isinstance(scenario, str) else scenario
+    if shard not in ("grid", "clients"):
+        raise ValueError(f"unknown shard mode {shard!r}")
     pol_names, hypers = [], []
     for p in policies:
         name, hyper = p if isinstance(p, tuple) else (p, None)
@@ -398,6 +552,7 @@ def sweep(scenario: Scenario | str = "paper-baseline",
                             if hyper is None else hyper))
     seeds = tuple(range(seeds)) if isinstance(seeds, int) else tuple(seeds)
     etas = tuple(float(e) for e in etas)
+    mesh = resolve_sweep_mesh(devices)
 
     env = scenario.build_env(n_clients, np.random.default_rng(env_seed))
     env_arrays = EnvArrays.from_scenario(scenario, env)
@@ -407,15 +562,28 @@ def sweep(scenario: Scenario | str = "paper-baseline",
                                  indexing="ij")
     g_eta = np.array(etas, np.float32)[grid_e.ravel()]
     g_seed = np.array(seeds, np.int64)[grid_s.ravel()]
+    n_grid = len(g_eta)
 
-    rts = _run_grid(
-        env_arrays, jnp.float32(model_bits),
-        jnp.asarray(hypers, jnp.float32), jnp.asarray(g_eta),
-        jnp.asarray(g_seed),
-        policies=tuple(pol_names), scen=scenario, n_rounds=n_rounds,
-        s_round=s_round, n_req=math.ceil(n_clients * frac_request),
-        fluctuate=fluctuate)
-    rts = np.asarray(rts).reshape(len(pol_names), len(etas), len(seeds),
-                                  n_rounds)
+    if mesh is not None and shard == "grid":
+        g_eta = dist_sharding.pad_leading(g_eta, mesh.size)
+        g_seed = dist_sharding.pad_leading(g_seed, mesh.size)
+    if mesh is not None and shard == "clients":
+        env_arrays = dist_sharding.shard_leading(env_arrays, mesh)
+
+    with warnings.catch_warnings():
+        # grid arrays are donated for the multi-device path; CPU cannot
+        # donate and warns — that's expected, not actionable
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        rts = _run_grid(
+            env_arrays, jnp.float32(model_bits),
+            jnp.asarray(hypers, jnp.float32), jnp.asarray(g_eta),
+            jnp.asarray(g_seed),
+            policies=tuple(pol_names), scen=scenario, n_rounds=n_rounds,
+            s_round=s_round, n_req=math.ceil(n_clients * frac_request),
+            fluctuate=fluctuate, chunk_rounds=chunk_rounds, mesh=mesh,
+            shard=shard)
+    rts = np.asarray(rts)[:, :n_grid].reshape(
+        len(pol_names), len(etas), len(seeds), n_rounds)
     return SweepResult(policies=tuple(pol_names), hypers=tuple(hypers),
                        etas=etas, seeds=seeds, round_times=rts)

@@ -222,11 +222,12 @@ def test_engine_replay_matches_server(policy):
 
 
 def test_sweep_single_jit_full_grid():
-    """The acceptance-criteria grid (6 policies x 3 eta x 8 seeds) runs as
-    one jit call and produces sane, policy-distinguishable output."""
+    """The acceptance-criteria grid (all 8 policies x 3 eta x 8 seeds,
+    incl. discounted + sliding-window UCB) runs as one jit call and
+    produces sane, policy-distinguishable output."""
     res = engine_jax.sweep(n_rounds=12, n_clients=40, seeds=8,
                            etas=(1.0, 1.5, 1.9), frac_request=0.25)
-    assert res.round_times.shape == (6, 3, 8, 12)
+    assert res.round_times.shape == (len(bandit_jax.POLICY_NAMES), 3, 8, 12)
     assert np.all(res.round_times > 0)
     el = res.mean_elapsed()        # [P, E], seed-averaged
     assert np.all(np.isfinite(el))

@@ -1,0 +1,152 @@
+"""numpy <-> JAX parity for the non-stationary policies promoted into
+core.bandit_jax (discounted / sliding-window UCB), plus the regression the
+discounting exists for: under client churn, forgetting stale statistics
+must buy shorter rounds than naive UCB's all-history averages.
+
+Mirrors tests/test_bandit_jax.py's layering: per-round selection parity on
+a drifting environment first, then full-run replay parity against the
+numpy FederatedServer, then the behavioral regression.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from test_bandit_jax import _replay_inputs
+
+from repro.core import bandit_jax
+from repro.core.bandit import ClientStats, make_policy
+from repro.core.nonstationary import DriftingResources
+from repro.fl.server import FederatedServer, FLConfig
+from repro.sim import engine_jax
+from repro.sim.network import make_network_env
+from repro.sim.resources import PAPER_MODEL_BITS, ResourceModel
+from repro.sim.scenarios import Scenario
+
+
+# ---------------------------------------------------------------------------
+# 1. per-round selection parity on a drifting environment
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["discounted_ucb", "sliding_ucb"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_nonstationary_selection_parity(policy, seed):
+    """Drive the numpy policy (+ its decayed stats) and the BanditState
+    twin through the same drifting-environment observation sequence; the
+    f32 port must select the identical ordered set every round."""
+    k, s_round, n_rounds = 20, 4, 30
+    rng = np.random.default_rng(seed)
+    env = make_network_env(k, np.random.default_rng(seed))
+    res = DriftingResources(env, eta=1.5, model_bits=PAPER_MODEL_BITS,
+                            drift=0.1, seed=seed)
+    pol = make_policy(policy, k, s_round)
+    st_np = ClientStats.create(k)
+    st_jx = bandit_jax.BanditState.create(k)
+    decay = bandit_jax.policy_decay(policy)
+    hyper = jnp.float32(bandit_jax.DEFAULT_HYPERS[policy])
+    fn = bandit_jax.make_select_fn(policy, s_round)
+
+    for r in range(n_rounds):
+        res.advance()
+        t_ud, t_ul = res.sample_times(rng)
+        cands = np.sort(rng.choice(k, size=8, replace=False))
+        want = pol.select(st_np, cands, rng)
+        mask = bandit_jax.candidate_mask(k, jnp.asarray(cands))
+        sel = fn(st_jx, mask, None, jnp.asarray(t_ud, jnp.float32),
+                 jnp.asarray(t_ul, jnp.float32), hyper)
+        got = [int(x) for x in sel if int(x) >= 0]
+        assert got == want, f"round {r}: {got} != {want}"
+
+        # observe both sides the way FederatedServer does (T_inc is not
+        # read by either policy; 0 keeps the comparison focused)
+        for c in want:
+            st_np.observe(c, float(t_ud[c]), float(t_ul[c]), 0.0)
+        if hasattr(pol, "observe_round"):
+            pol.observe_round(want, t_ud, t_ul)
+        ud = jnp.asarray(t_ud[np.asarray(want)], jnp.float32)
+        ul = jnp.asarray(t_ul[np.asarray(want)], jnp.float32)
+        st_jx = bandit_jax.observe(st_jx, jnp.asarray(want), ud, ul,
+                                   jnp.zeros(len(want), jnp.float32),
+                                   decay=decay)
+
+
+def test_observe_decay_matches_discounted_stats():
+    """The disc_* state fields replicate DiscountedStats numerically
+    (decay-then-add order, discounted total)."""
+    from repro.core.nonstationary import DiscountedStats
+    k, gamma = 6, 0.9
+    rng = np.random.default_rng(3)
+    d = DiscountedStats(k, gamma)
+    st = bandit_jax.BanditState.create(k)
+    for _ in range(25):
+        sel = list(np.sort(rng.choice(k, size=2, replace=False)))
+        ud = rng.uniform(1, 50, k)
+        ul = rng.uniform(1, 50, k)
+        d.observe_round(sel, ud, ul)
+        st = bandit_jax.observe(
+            st, jnp.asarray(sel), jnp.asarray(ud[sel], jnp.float32),
+            jnp.asarray(ul[sel], jnp.float32),
+            jnp.zeros(len(sel), jnp.float32), decay=gamma)
+    np.testing.assert_allclose(np.asarray(st.disc_n), d.n, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(st.disc_ud), d.sum_ud, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(st.disc_ul), d.sum_ul, rtol=1e-5)
+    np.testing.assert_allclose(float(st.disc_total), d.total, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# 2. full-run replay parity vs FederatedServer (common random numbers)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["discounted_ucb", "sliding_ucb"])
+def test_engine_replay_matches_server_nonstationary(policy):
+    n, s_round, rounds = 40, 4, 30
+    env = make_network_env(n, np.random.default_rng(7))
+    res = ResourceModel(env, eta=1.5, model_bits=PAPER_MODEL_BITS)
+    cfg = FLConfig(n_clients=n, frac_request=0.25, s_round=s_round, seed=3)
+
+    srv = FederatedServer(cfg, make_policy(policy, n, s_round), res)
+    srv.run(rounds)
+
+    masks, t_ud, t_ul = _replay_inputs(cfg, res, rounds)
+    out = engine_jax.run_replay(
+        jnp.int32(bandit_jax.POLICY_IDS[policy]),
+        jnp.float32(bandit_jax.DEFAULT_HYPERS[policy]),
+        jnp.asarray(masks), jnp.asarray(t_ud, jnp.float32),
+        jnp.asarray(t_ul, jnp.float32), jax.random.PRNGKey(0),
+        s_round=s_round)
+
+    want_rt = np.array([rec.round_time for rec in srv.history])
+    np.testing.assert_allclose(np.asarray(out["round_times"]), want_rt,
+                               rtol=1e-4)
+    for r, rec in enumerate(srv.history):
+        got = [int(x) for x in out["selected"][r] if int(x) >= 0]
+        assert got == rec.selected, f"round {r} selection diverged"
+
+
+# ---------------------------------------------------------------------------
+# 3. the behavioral regression: forgetting wins under churn
+# ---------------------------------------------------------------------------
+
+def test_discounted_beats_naive_under_churn():
+    """With a client replaced every round, naive UCB's all-history means go
+    stale while discounted UCB forgets them — its median elapsed time over
+    seeds must be strictly lower.  Deterministic given the seeds (JAX
+    threefry + f32 on CPU), so a thin margin is still a stable gate."""
+    heavy = Scenario("churn-heavy", churn_prob=1.0)
+    res = engine_jax.sweep(heavy, policies=("naive_ucb", "discounted_ucb"),
+                           etas=(1.5,), seeds=8, n_rounds=600,
+                           n_clients=30, frac_request=0.2)
+    el = res.elapsed[:, 0, :]                    # [policy, seed]
+    med_naive, med_disc = np.median(el, axis=1)
+    assert med_disc < med_naive, (med_disc, med_naive)
+
+
+def test_new_policies_in_engine_scenarios():
+    """Both non-stationary policies run inside the one-jit sweep on every
+    drifting scenario with finite output."""
+    for name in ["diurnal-drift", "client-churn"]:
+        res = engine_jax.sweep(name, n_rounds=6, n_clients=24, seeds=2,
+                               etas=(1.5,),
+                               policies=("discounted_ucb", "sliding_ucb"))
+        assert res.round_times.shape == (2, 1, 2, 6)
+        assert np.all(np.isfinite(res.round_times))
