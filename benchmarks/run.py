@@ -5,6 +5,9 @@ benches.  Prints ``name,us_per_call,derived`` CSV lines.
   fig3    — accuracy vs elapsed time (Fig 3)
   fig4    — UCB-score convergence (Fig 4)
   kernels — Pallas kernel micro-benches (interpret mode vs jnp reference)
+  round_kernel — fused bandit-round hot path vs the unfused baseline,
+            bitwise parity gate incl. the Pallas kernel in interpret mode
+            (BENCH_round_kernel.json)
   roofline— per (arch x shape) roofline terms from the dry-run artifacts
   scale   — selection-at-scale: vectorized UCB scoring for 1e6 arms
   fl_engine — learning-coupled engine vs the classic host training loop
@@ -43,8 +46,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_accuracy, bench_convergence, bench_drift,
-                            bench_fl_engine, bench_kernels, bench_roofline,
-                            bench_scale, bench_selection, bench_sharded_sweep,
+                            bench_fl_engine, bench_kernels,
+                            bench_roofline, bench_round_kernel, bench_scale,
+                            bench_selection, bench_sharded_sweep,
                             bench_sweep)
     sections = {
         "fig1_2": bench_selection.main,
@@ -52,6 +56,7 @@ def main() -> None:
         "fig4": bench_convergence.main,
         "drift": bench_drift.main,
         "kernels": bench_kernels.main,
+        "round_kernel": bench_round_kernel.main,
         "roofline": bench_roofline.main,
         "scale": bench_scale.main,
         "sweep": bench_sweep.main,

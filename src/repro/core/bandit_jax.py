@@ -119,13 +119,19 @@ class BanditState:
         return dataclasses.replace(self, **kw)
 
 
-def ucb_bonus(state: BanditState) -> jnp.ndarray:
-    """[K] UCB exploration bonus sqrt(ln ΣN / 2 N_k); BIG for never-selected
-    clients (the explore-first rule), mirroring ClientStats.ucb_bonus."""
-    nf = jnp.maximum(state.n_sel.astype(jnp.float32), 1.0)
-    total = jnp.maximum(state.total.astype(jnp.float32), 2.0)
+def ucb_bonus_arrays(n_sel: jnp.ndarray, total: jnp.ndarray) -> jnp.ndarray:
+    """UCB exploration bonus sqrt(ln ΣN / 2 N_k) on raw arrays of any shape
+    (full [K] state or a candidate-compacted [C] slice); BIG for
+    never-selected clients (the explore-first rule)."""
+    nf = jnp.maximum(n_sel.astype(jnp.float32), 1.0)
+    total = jnp.maximum(total.astype(jnp.float32), 2.0)
     bonus = jnp.sqrt(jnp.log(total) / (2.0 * nf))
-    return jnp.where(state.n_sel == 0, BIG, bonus)
+    return jnp.where(n_sel == 0, BIG, bonus)
+
+
+def ucb_bonus(state: BanditState) -> jnp.ndarray:
+    """[K] UCB exploration bonus, mirroring ClientStats.ucb_bonus."""
+    return ucb_bonus_arrays(state.n_sel, state.total)
 
 
 def observe(state: BanditState, idx: jnp.ndarray, t_ud: jnp.ndarray,
@@ -176,13 +182,21 @@ def observe(state: BanditState, idx: jnp.ndarray, t_ud: jnp.ndarray,
     )
 
 
-def _greedy_tinc(est_ud: jnp.ndarray, est_ul: jnp.ndarray,
-                 cand_mask: jnp.ndarray, s_round: int) -> jnp.ndarray:
-    """Algorithm 1 on estimates: returns [s_round] selected indices
-    (-1 padded).  est_*: [K]; cand_mask: [K] bool.
+def greedy_slots(est_ud: jnp.ndarray, est_ul: jnp.ndarray,
+                 valid: jnp.ndarray, s_round: int) -> jnp.ndarray:
+    """Algorithm 1 on per-arm estimates of ANY shape — the full [K] state
+    (``valid`` = candidate mask; returns client indices) or a candidate-
+    compacted [C] slice (``valid`` = in-range mask; returns slot indices).
+    Returns [s_round] picks, -1 padded.
 
-    Ties break toward the lowest client index (argmax convention), matching
-    the numpy reference when candidates are fed in sorted order.  As in the
+    The ONE copy of the per-step Algorithm-1 arithmetic, shared by the
+    mask-based fallback (``_greedy_tinc``), the compacted reference
+    (kernels/ref.py) and the Pallas kernel body (kernels/bandit_round.py)
+    — any tie-break or clamp change lands in all three at once, which the
+    bitwise-parity tests require.
+
+    Ties break toward the lowest index (argmax convention), matching the
+    numpy reference when candidates are fed in sorted order.  As in the
     numpy greedy_select, the elapsed accumulator is clamped at 0 so the BIG
     exploration sentinel cannot poison later T_inc comparisons (in float32
     a t of -BIG would absorb every real time difference entirely).
@@ -202,8 +216,36 @@ def _greedy_tinc(est_ud: jnp.ndarray, est_ul: jnp.ndarray,
 
     sel0 = jnp.full((s_round,), -1, jnp.int32)
     sel, *_ = jax.lax.fori_loop(
-        0, s_round, body, (sel0, cand_mask, jnp.float32(0), jnp.float32(0)))
+        0, s_round, body, (sel0, valid, jnp.float32(0), jnp.float32(0)))
     return sel
+
+
+def top_slots(score: jnp.ndarray, valid: jnp.ndarray,
+              s_round: int) -> jnp.ndarray:
+    """Sort-free top-S over a score array of any shape: S iterations of
+    masked argmax, -1 padded.  Equal scores resolve to the lowest index
+    first — exactly ``lax.top_k``'s stable tie order, so it selects
+    bitwise-identically to ``_top_score`` (which the fallback keeps for
+    its single-dispatch top_k).  Shared by the compacted reference and the
+    Pallas kernel body."""
+    def body(i, carry):
+        sel, mask = carry
+        s = jnp.where(mask, score, -jnp.inf)
+        x = jnp.argmax(s)
+        ok = mask[x]
+        sel = sel.at[i].set(jnp.where(ok, x, -1))
+        return sel, mask.at[x].set(False)
+
+    sel0 = jnp.full((s_round,), -1, jnp.int32)
+    sel, _ = jax.lax.fori_loop(0, s_round, body, (sel0, valid))
+    return sel
+
+
+def _greedy_tinc(est_ud: jnp.ndarray, est_ul: jnp.ndarray,
+                 cand_mask: jnp.ndarray, s_round: int) -> jnp.ndarray:
+    """Mask-based Algorithm 1 over the full [K] state (the static
+    fallback's entry point): :func:`greedy_slots` with client indices."""
+    return greedy_slots(est_ud, est_ul, cand_mask, s_round)
 
 
 def _top_score(score: jnp.ndarray, cand_mask: jnp.ndarray,
@@ -222,6 +264,56 @@ def candidate_mask(k: int, candidates: jnp.ndarray) -> jnp.ndarray:
     return jnp.zeros(k, bool).at[candidates].set(True)
 
 
+def cand_idx_from_mask(cand_mask: jnp.ndarray, size: int) -> jnp.ndarray:
+    """[size] int32 sorted candidate indices from a [K] bool mask, padded
+    with K past the last candidate — the input format of the fused round
+    (kernels/ops.bandit_round).  ``size`` must bound the candidate count.
+
+    This is the *generic* bridge (tests, replay harnesses); the engines
+    never call it — they keep the candidate indices they drew in the first
+    place and sort those, because an in-jit ``nonzero`` costs a full [K]
+    compaction pass per round.
+    """
+    k = cand_mask.shape[0]
+    return jnp.nonzero(cand_mask, size=size, fill_value=k)[0].astype(
+        jnp.int32)
+
+
+def schedule_selected(sel: jnp.ndarray, t_ud: jnp.ndarray,
+                      t_ul: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (round_time, incs[S]) for selection ``sel`` ([S], -1 padded).
+
+    round_time is the physically realized schedule (multicast distribution
+    T_d = max t_UL, parallel local update, sequential upload in order) —
+    bandit.true_round_time; incs is the per-client Eq. (1) accumulation the
+    server records as the T_inc observation.  Shared by both engines
+    (sim/engine_jax re-exports it as ``_schedule``) and by the fused round
+    reference (kernels/ref.py).
+    """
+    valid = sel >= 0
+    safe = jnp.where(valid, sel, 0)
+    ud = jnp.where(valid, t_ud[safe], 0.0)
+    ul = jnp.where(valid, t_ul[safe], 0.0)
+
+    t_d = jnp.max(jnp.where(valid, ul, 0.0))
+    def tbody(t, x):
+        ud_k, ul_k, v = x
+        t2 = jnp.maximum(t, t_d + ud_k) + ul_k
+        return jnp.where(v, t2, t), None
+    round_time, _ = jax.lax.scan(tbody, t_d, (ud, ul, valid))
+
+    def ibody(carry, x):
+        t, td = carry
+        ud_k, ul_k, v = x
+        ntd = jnp.maximum(td, ul_k)
+        inc = (ntd - td) + jnp.maximum(ud_k - (t - td), 0.0) + ul_k
+        return ((jnp.where(v, t + inc, t), jnp.where(v, ntd, td)),
+                jnp.where(v, inc, 0.0))
+    _, incs = jax.lax.scan(ibody, (jnp.float32(0), jnp.float32(0)),
+                           (ud, ul, valid))
+    return round_time, incs
+
+
 # ---------------------------------------------------------------------------
 # The six reference policies behind the common mask-based interface.
 #   select_*_mask(state, cand_mask, key, true_ud, true_ul, hyper) -> [S] idx
@@ -231,18 +323,105 @@ def _mean(sums: jnp.ndarray, n: jnp.ndarray) -> jnp.ndarray:
     return sums / jnp.maximum(n.astype(jnp.float32), 1.0)
 
 
+# Per-arm statistics each policy's scoring actually reads (the fused round
+# gathers only these columns for the candidate set).  ``hist_sum_*`` are the
+# ring-buffer sums (reduced over the window axis before gathering).
+POLICY_STATS: dict[str, tuple[str, ...]] = {
+    "fedcs": ("last_ud", "last_ul"),
+    "extended_fedcs": ("hist_sum_ud", "hist_sum_ul", "hist_n"),
+    "naive_ucb": ("sum_tinc", "n_sel"),
+    "elementwise_ucb": ("sum_ud", "sum_ul", "n_sel"),
+    "random": (),
+    "oracle": (),
+    "discounted_ucb": ("disc_n", "disc_ud", "disc_ul"),
+    "sliding_ucb": ("hist_sum_ud", "hist_sum_ul", "hist_n", "n_sel"),
+}
+
+
+def state_obs(state: BanditState) -> dict[str, jnp.ndarray]:
+    """Full-[K] observation dict for :func:`policy_scores` (jit DCE prunes
+    the entries a given policy does not read)."""
+    return dict(
+        n_sel=state.n_sel, sum_ud=state.sum_ud, sum_ul=state.sum_ul,
+        sum_tinc=state.sum_tinc, last_ud=state.last_ud,
+        last_ul=state.last_ul, hist_sum_ud=state.hist_ud.sum(1),
+        hist_sum_ul=state.hist_ul.sum(1), hist_n=state.hist_n,
+        disc_n=state.disc_n, disc_ud=state.disc_ud, disc_ul=state.disc_ul)
+
+
+def policy_scores(policy: str, obs: dict, total, disc_total, t_ud, t_ul,
+                  rand, hyper):
+    """The ONE definition of every policy's per-arm selection inputs.
+
+    ``obs`` holds per-arm statistics of any shape — the full [K] state
+    (``state_obs``, the mask-based select fns below) or a candidate-
+    compacted [C] slice (the fused round in kernels/ref.py and
+    kernels/bandit_round.py); ``t_ud``/``t_ul``/``rand`` must be sliced the
+    same way by the caller.  Returns ``("greedy", est_ud, est_ul)`` for the
+    Algorithm-1 policies or ``("score", score, None)`` for the fixed-score
+    policies (Naive MAB-CS, random).  Arithmetic is shared verbatim between
+    both call sites, so fused and fallback selections agree bitwise.
+    """
+    if policy == "fedcs":
+        return "greedy", obs["last_ud"], obs["last_ul"]
+    if policy == "extended_fedcs":
+        n = jnp.maximum(obs["hist_n"], 1).astype(jnp.float32)
+        return "greedy", obs["hist_sum_ud"] / n, obs["hist_sum_ul"] / n
+    if policy == "naive_ucb":
+        score = (-_mean(obs["sum_tinc"], obs["n_sel"]) / hyper
+                 + ucb_bonus_arrays(obs["n_sel"], total))
+        return "score", score, None
+    if policy == "elementwise_ucb":
+        bonus = ucb_bonus_arrays(obs["n_sel"], total)
+        return ("greedy", _mean(obs["sum_ud"], obs["n_sel"]) / hyper - bonus,
+                _mean(obs["sum_ul"], obs["n_sel"]) / hyper - bonus)
+    if policy == "random":
+        return "score", rand, None
+    if policy == "oracle":
+        return "greedy", t_ud, t_ul
+    if policy == "discounted_ucb":
+        n = obs["disc_n"]
+        cold = n < 1e-2
+        mean_ud = jnp.where(cold, 0.0, obs["disc_ud"] / jnp.maximum(n, 1e-3))
+        mean_ul = jnp.where(cold, 0.0, obs["disc_ul"] / jnp.maximum(n, 1e-3))
+        eff_total = jnp.maximum(disc_total, 2.0)
+        b = jnp.sqrt(jnp.log(eff_total) / (2.0 * jnp.maximum(n, 1e-3)))
+        bonus = jnp.where(cold, BIG, jnp.minimum(b, BIG))
+        return ("greedy", mean_ud / hyper - bonus, mean_ul / hyper - bonus)
+    if policy == "sliding_ucb":
+        n = jnp.maximum(obs["hist_n"], 1).astype(jnp.float32)
+        bonus = ucb_bonus_arrays(obs["n_sel"], total)
+        return ("greedy", (obs["hist_sum_ud"] / n) / hyper - bonus,
+                (obs["hist_sum_ul"] / n) / hyper - bonus)
+    raise ValueError(f"unknown policy {policy!r}; have {list(POLICY_STATS)}")
+
+
+def _select_via_scores(policy, state, cand_mask, key, true_ud, true_ul,
+                       hyper, s_round: int) -> jnp.ndarray:
+    """Static-fallback selection: full-[K] :func:`policy_scores` into the
+    masked greedy / top-S primitives."""
+    rand = (jax.random.uniform(key, cand_mask.shape)
+            if policy == "random" else None)
+    kind, a, b = policy_scores(policy, state_obs(state), state.total,
+                               state.disc_total, true_ud, true_ul, rand,
+                               hyper)
+    if kind == "score":
+        return _top_score(a, cand_mask, s_round)
+    return _greedy_tinc(a, b, cand_mask, s_round)
+
+
 def select_fedcs_mask(state, cand_mask, key, true_ud, true_ul, hyper,
                       *, s_round: int) -> jnp.ndarray:
     """FedCS: last observed latency is the estimate (never-seen => 0 s)."""
-    return _greedy_tinc(state.last_ud, state.last_ul, cand_mask, s_round)
+    return _select_via_scores("fedcs", state, cand_mask, key, true_ud,
+                              true_ul, hyper, s_round)
 
 
 def select_extended_fedcs_mask(state, cand_mask, key, true_ud, true_ul, hyper,
                                *, s_round: int) -> jnp.ndarray:
     """Extended FedCS: moving average of the last W observations."""
-    n = jnp.maximum(state.hist_n, 1).astype(jnp.float32)
-    return _greedy_tinc(state.hist_ud.sum(1) / n, state.hist_ul.sum(1) / n,
-                        cand_mask, s_round)
+    return _select_via_scores("extended_fedcs", state, cand_mask, key,
+                              true_ud, true_ul, hyper, s_round)
 
 
 def _naive_scores(state: BanditState, alpha, use_kernel: bool) -> jnp.ndarray:
@@ -263,31 +442,32 @@ def select_naive_mask(state, cand_mask, key, true_ud, true_ul, hyper,
     (hyper-parameter sweeps) falls back to the jnp elementwise path.
     """
     k = state.n_sel.shape[0]
-    use_kernel = isinstance(hyper, (int, float)) and k >= KERNEL_MIN_K
-    return _top_score(_naive_scores(state, hyper, use_kernel), cand_mask,
-                      s_round)
+    if isinstance(hyper, (int, float)) and k >= KERNEL_MIN_K:
+        return _top_score(_naive_scores(state, hyper, True), cand_mask,
+                          s_round)
+    return _select_via_scores("naive_ucb", state, cand_mask, key, true_ud,
+                              true_ul, hyper, s_round)
 
 
 def select_elementwise_mask(state, cand_mask, key, true_ud, true_ul, hyper,
                             *, s_round: int) -> jnp.ndarray:
     """Element-wise MAB-CS (Eqs. 5-7).  ``hyper`` is beta."""
-    bonus = ucb_bonus(state)
-    tau_ud = _mean(state.sum_ud, state.n_sel) / hyper - bonus
-    tau_ul = _mean(state.sum_ul, state.n_sel) / hyper - bonus
-    return _greedy_tinc(tau_ud, tau_ul, cand_mask, s_round)
+    return _select_via_scores("elementwise_ucb", state, cand_mask, key,
+                              true_ud, true_ul, hyper, s_round)
 
 
 def select_random_mask(state, cand_mask, key, true_ud, true_ul, hyper,
                        *, s_round: int) -> jnp.ndarray:
     """Uniform S-subset of the candidates (random scores + top-S)."""
-    r = jax.random.uniform(key, cand_mask.shape)
-    return _top_score(r, cand_mask, s_round)
+    return _select_via_scores("random", state, cand_mask, key, true_ud,
+                              true_ul, hyper, s_round)
 
 
 def select_oracle_mask(state, cand_mask, key, true_ud, true_ul, hyper,
                        *, s_round: int) -> jnp.ndarray:
     """Clairvoyant: greedy on this round's true sampled times (upper bound)."""
-    return _greedy_tinc(true_ud, true_ul, cand_mask, s_round)
+    return _select_via_scores("oracle", state, cand_mask, key, true_ud,
+                              true_ul, hyper, s_round)
 
 
 def select_discounted_mask(state, cand_mask, key, true_ud, true_ul, hyper,
@@ -297,18 +477,12 @@ def select_discounted_mask(state, cand_mask, key, true_ud, true_ul, hyper,
 
     ``hyper`` is beta; the decay gamma lives in the state updates
     (:func:`observe` with ``decay=policy_decay("discounted_ucb")``), not
-    here.  Thresholds and the BIG clamp mirror DiscountedStats exactly so
-    the f32 port selects identically to the float64 numpy reference.
+    here.  Thresholds and the BIG clamp (see :func:`policy_scores`) mirror
+    DiscountedStats exactly so the f32 port selects identically to the
+    float64 numpy reference.
     """
-    n = state.disc_n
-    cold = n < 1e-2
-    mean_ud = jnp.where(cold, 0.0, state.disc_ud / jnp.maximum(n, 1e-3))
-    mean_ul = jnp.where(cold, 0.0, state.disc_ul / jnp.maximum(n, 1e-3))
-    eff_total = jnp.maximum(state.disc_total, 2.0)
-    b = jnp.sqrt(jnp.log(eff_total) / (2.0 * jnp.maximum(n, 1e-3)))
-    bonus = jnp.where(cold, BIG, jnp.minimum(b, BIG))
-    return _greedy_tinc(mean_ud / hyper - bonus, mean_ul / hyper - bonus,
-                        cand_mask, s_round)
+    return _select_via_scores("discounted_ucb", state, cand_mask, key,
+                              true_ud, true_ul, hyper, s_round)
 
 
 def select_sliding_mask(state, cand_mask, key, true_ud, true_ul, hyper,
@@ -316,12 +490,8 @@ def select_sliding_mask(state, cand_mask, key, true_ud, true_ul, hyper,
     """Sliding-window Element-wise MAB-CS (core.nonstationary): tau from the
     last-W-observation ring-buffer means with the global UCB bonus.
     ``hyper`` is beta."""
-    n = jnp.maximum(state.hist_n, 1).astype(jnp.float32)
-    mean_ud = state.hist_ud.sum(1) / n
-    mean_ul = state.hist_ul.sum(1) / n
-    bonus = ucb_bonus(state)
-    return _greedy_tinc(mean_ud / hyper - bonus, mean_ul / hyper - bonus,
-                        cand_mask, s_round)
+    return _select_via_scores("sliding_ucb", state, cand_mask, key, true_ud,
+                              true_ul, hyper, s_round)
 
 
 SELECT_FNS: dict[str, Callable] = {
@@ -358,6 +528,44 @@ def make_select_fn(policy: str, s_round: int) -> Callable:
     if policy not in SELECT_FNS:
         raise ValueError(f"unknown policy {policy!r}; have {POLICY_NAMES}")
     return functools.partial(SELECT_FNS[policy], s_round=s_round)
+
+
+def make_round_fn(policy: str, s_round: int, *,
+                  use_kernel: bool | None = None,
+                  interpret: bool | None = None) -> Callable:
+    """The fused fast path: one whole protocol round — policy scoring,
+    candidate-compacted Algorithm-1 / top-S selection, realized schedule,
+    and the ``observe`` statistics update — as a single call
+
+        round_fn(state, cand_idx, key, t_ud, t_ul, hyper)
+            -> (new_state, sel [S], round_time)
+
+    ``cand_idx``: [C] int32 *sorted* candidate indices (entries >= K are
+    padding; :func:`cand_idx_from_mask` bridges from masks).  Selections,
+    round times and state updates are bitwise-identical to the static
+    fallback (``make_select_fn`` + ``schedule_selected`` + ``observe``) —
+    pinned by tests/test_bandit_round.py — but the hot path runs over the
+    [C]-compacted candidate slice instead of S passes over all K arms, and
+    on TPU the whole round is one Pallas kernel (kernels/bandit_round.py;
+    ``use_kernel``/``interpret`` override the kernels/ops auto-routing).
+    The per-round decay of the ``disc_*`` statistics is resolved statically
+    from the policy, exactly as the engines do for the fallback.
+    """
+    if policy not in SELECT_FNS:
+        raise ValueError(f"unknown policy {policy!r}; have {POLICY_NAMES}")
+    decay = policy_decay(policy)
+
+    def round_fn(state, cand_idx, key, t_ud, t_ul, hyper):
+        from repro.kernels import ops
+        # same [K] uniform draw (same key) as select_random_mask, so the
+        # fused and fallback paths consume identical randomness
+        rand = (jax.random.uniform(key, t_ud.shape)
+                if policy == "random" else None)
+        return ops.bandit_round(state, cand_idx, t_ud, t_ul, rand, hyper,
+                                policy=policy, s_round=s_round, decay=decay,
+                                use_kernel=use_kernel, interpret=interpret)
+
+    return round_fn
 
 
 # ---------------------------------------------------------------------------

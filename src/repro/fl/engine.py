@@ -40,7 +40,6 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-import warnings
 from typing import Any
 
 import jax
@@ -60,6 +59,7 @@ from repro.models import cnn
 from repro.optim.sgd import paper_lr
 from repro.sim import engine_jax
 from repro.sim.scenarios import Scenario, get_scenario
+from repro.utils.compat import suppress_unusable_donation_warnings
 from repro.utils.trees import tree_bytes
 
 # Paper Sect. IV-B local recipe (the lr side lives in optim/sgd.py).
@@ -151,7 +151,8 @@ def make_cnn_task(scenario: Scenario | str = "paper-baseline",
 # Pure step functions (also consumed by fl/cnn_trainer.py's host path).
 # ---------------------------------------------------------------------------
 
-def make_client_update(loss_fn, *, epochs: int, batch_size: int):
+def make_client_update(loss_fn, *, epochs: int, batch_size: int,
+                       native_perm: bool = False):
     """The paper's per-round client recipe as ONE pure function:
     E epochs of minibatch SGD over the client's padded shard.
 
@@ -160,15 +161,28 @@ def make_client_update(loss_fn, *, epochs: int, batch_size: int):
     ``count`` are masked out (the remainder is dropped, as in the host
     trainer).  The whole thing is an inner ``lax.scan`` with a static trip
     count, so it vmaps over clients with no shape polymorphism.
+
+    ``native_perm`` draws each epoch's shuffle via
+    ``jax.random.permutation`` directly instead of the uniform+``argsort``
+    idiom.  The two are equally-distributed but consume *different* bits,
+    and the native draw cannot push padding slots last — so it is only
+    valid when every shard is full (count == cap everywhere; the engines
+    auto-detect this via ``_native_perm_auto``).  The default keeps the
+    argsort idiom, leaving the replay-parity stream byte-identical to the
+    historical one for padded tasks.
     """
     def client_update(params, train_x, train_y, idx, count, lr, key):
         cap = idx.shape[0]
         n_b = cap // batch_size
         pos = jnp.arange(cap)
 
-        def epoch_perm(kk):
-            r = jax.random.uniform(kk, (cap,)) + 2.0 * (pos >= count)
-            return idx[jnp.argsort(r)]
+        if native_perm:
+            def epoch_perm(kk):
+                return idx[jax.random.permutation(kk, cap)]
+        else:
+            def epoch_perm(kk):
+                r = jax.random.uniform(kk, (cap,)) + 2.0 * (pos >= count)
+                return idx[jnp.argsort(r)]
 
         perms = jax.vmap(epoch_perm)(jax.random.split(key, epochs))
         batches = perms.reshape(epochs * n_b, batch_size)
@@ -189,14 +203,25 @@ def make_client_update(loss_fn, *, epochs: int, batch_size: int):
 
 
 @functools.lru_cache(maxsize=None)
-def jitted_client_update(cfg: cnn.CnnConfig, epochs: int, batch_size: int):
+def jitted_client_update(cfg: cnn.CnnConfig, epochs: int, batch_size: int,
+                         native_perm: bool = False):
     """Cached host-side jit of the whole client recipe, keyed by the static
     config — fl/cnn_trainer.py's production path, and repeated host runs
     (tests, benchmarks) reuse the compilation instead of re-tracing fresh
     closures."""
     return jax.jit(make_client_update(
         functools.partial(cnn.loss_fn, cfg=cfg),
-        epochs=epochs, batch_size=batch_size))
+        epochs=epochs, batch_size=batch_size, native_perm=native_perm))
+
+
+def _native_perm_auto(task: FlTask) -> bool:
+    """True when every client's shard is exactly full (count == cap), i.e.
+    the padding penalty in the argsort shuffle is a provable no-op and the
+    native ``jax.random.permutation`` draw is a valid (faster, different-
+    bits) replacement.  Resolved on host from the concrete task, and used
+    identically by the sweep, the replay scan and the host reference, so
+    every replay-parity pair stays in lockstep."""
+    return bool(np.asarray(task.part_count == task.part_idx.shape[1]).all())
 
 
 def make_evaluator(apply_fn):
@@ -350,27 +375,37 @@ def _round_lrs(n_rounds: int) -> jnp.ndarray:
 
 def _make_protocol_round(task: FlTask, hyper, *, policy: str, s_round: int,
                          epochs: int, batch_size: int, cohort: str,
-                         use_kernel: bool, cfg: cnn.CnnConfig):
+                         use_kernel: bool, cfg: cnn.CnnConfig,
+                         fused: bool = False, native_perm: bool = False):
     """The ONE learning-coupled round — select, schedule, observe, train,
     evaluate — shared by the single-shot and chunked scans.
 
-    Returns ``protocol_round(params, bstate, cand_mask, t_ud, t_ul, k_pol,
-    k_perm, lr) -> (params, bstate, round_time, accuracy, sel)``.
+    Returns ``protocol_round(params, bstate, cand, t_ud, t_ul, k_pol,
+    k_perm, lr) -> (params, bstate, round_time, accuracy, sel)``.  ``cand``
+    is a [K] bool candidate mask, or — with ``fused`` — the [C] sorted
+    candidate indices consumed by the one-pass fused round
+    (kernels/ops.bandit_round); both encodings select bitwise-identically.
     """
     client_update = make_client_update(
         functools.partial(cnn.loss_fn, cfg=cfg),
-        epochs=epochs, batch_size=batch_size)
+        epochs=epochs, batch_size=batch_size, native_perm=native_perm)
     evaluate = make_evaluator(functools.partial(cnn.apply, cfg=cfg))
-    select_fn = bandit_jax.make_select_fn(policy, s_round)
-    decay = bandit_jax.policy_decay(policy)
+    if fused:
+        round_fn = bandit_jax.make_round_fn(policy, s_round)
+    else:
+        select_fn = bandit_jax.make_select_fn(policy, s_round)
+        decay = bandit_jax.policy_decay(policy)
 
-    def protocol_round(params, bstate, cand_mask, t_ud, t_ul, k_pol, k_perm,
-                       lr):
-        sel = select_fn(bstate, cand_mask, k_pol, t_ud, t_ul, hyper)
-        round_time, incs = engine_jax._schedule(sel, t_ud, t_ul)
-        safe = jnp.where(sel >= 0, sel, 0)
-        bstate = bandit_jax.observe(bstate, sel, t_ud[safe], t_ul[safe],
-                                    incs, decay=decay)
+    def protocol_round(params, bstate, cand, t_ud, t_ul, k_pol, k_perm, lr):
+        if fused:
+            bstate, sel, round_time = round_fn(bstate, cand, k_pol, t_ud,
+                                               t_ul, hyper)
+        else:
+            sel = select_fn(bstate, cand, k_pol, t_ud, t_ul, hyper)
+            round_time, incs = engine_jax._schedule(sel, t_ud, t_ul)
+            safe = jnp.where(sel >= 0, sel, 0)
+            bstate = bandit_jax.observe(bstate, sel, t_ud[safe], t_ul[safe],
+                                        incs, decay=decay)
         params = _train_round(params, sel, task, lr, k_perm,
                               client_update=client_update, cohort=cohort,
                               use_kernel=use_kernel)
@@ -382,7 +417,8 @@ def _make_protocol_round(task: FlTask, hyper, *, policy: str, s_round: int,
 
 def _scan_rounds(task: FlTask, hyper, pre: dict, *, policy: str,
                  s_round: int, epochs: int, batch_size: int, cohort: str,
-                 use_kernel: bool, cfg: cnn.CnnConfig):
+                 use_kernel: bool, cfg: cnn.CnnConfig,
+                 native_perm: bool = False):
     """R learning-coupled protocol rounds as one flat ``lax.scan`` over a
     presample dict of externally supplied arrays — the ``run_replay`` path
     (exact common-random-number twin of the host loop; stateless resource
@@ -394,7 +430,8 @@ def _scan_rounds(task: FlTask, hyper, pre: dict, *, policy: str,
     n_rounds = pre["cand_masks"].shape[0]
     protocol_round = _make_protocol_round(
         task, hyper, policy=policy, s_round=s_round, epochs=epochs,
-        batch_size=batch_size, cohort=cohort, use_kernel=use_kernel, cfg=cfg)
+        batch_size=batch_size, cohort=cohort, use_kernel=use_kernel, cfg=cfg,
+        native_perm=native_perm)
     state0 = bandit_jax.BanditState.create(k)
     lrs = _round_lrs(n_rounds)
 
@@ -417,14 +454,17 @@ def _scan_rounds_chunked(task: FlTask, hyper, seed, *, policy: str,
                          s_round: int, n_req: int, eta, model_bits,
                          fluctuate: bool, epochs: int, batch_size: int,
                          cohort: str, use_kernel: bool, cfg: cnn.CnnConfig,
-                         client_mesh=None):
+                         client_mesh=None, fused: bool = True,
+                         native_perm: bool = False):
     """The chunked twin of ``_presample`` + ``_scan_rounds``: an outer scan
     over R/c chunks regenerates each chunk's candidates/multipliers/draws
     from the same per-round keys ``_presample`` would use, so peak memory
     is O(c·K) while the consumed random stream — and therefore every
     selection, round time, and accuracy — is identical to the single-shot
     path.  ``client_mesh`` pins the [K] axes to a device mesh (large-K
-    layout)."""
+    layout); ``fused`` (default) routes select/schedule/observe through
+    the one-pass fused round — same candidate keys, sorted-index encoding,
+    bitwise-identical selections."""
     k = task.part_count.shape[0]
     c = int(chunk_rounds)
     if n_rounds % c:
@@ -440,16 +480,20 @@ def _scan_rounds_chunked(task: FlTask, hyper, seed, *, policy: str,
     lrs = _round_lrs(n_rounds).reshape(n_chunks, c)
     protocol_round = _make_protocol_round(
         task, hyper, policy=policy, s_round=s_round, epochs=epochs,
-        batch_size=batch_size, cohort=cohort, use_kernel=use_kernel, cfg=cfg)
+        batch_size=batch_size, cohort=cohort, use_kernel=use_kernel, cfg=cfg,
+        fused=fused, native_perm=native_perm)
     state0 = engine_jax._client_constrain(bandit_jax.BanditState.create(k),
                                           client_mesh)
 
     def chunk_body(carry, xs):
         params, bstate, m_theta, m_gamma = carry
         kk, rr, lr_c = xs
-        cand_masks = engine_jax._client_constrain(
-            engine_jax._cand_masks_from_keys(kk["cand"], k, n_req),
-            client_mesh, client_dim=1)
+        if fused:       # sorted indices, not masks (no client axis to pin)
+            cands = engine_jax._cand_sorted_from_keys(kk["cand"], k, n_req)
+        else:
+            cands = engine_jax._client_constrain(
+                engine_jax._cand_masks_from_keys(kk["cand"], k, n_req),
+                client_mesh, client_dim=1)
         thr_mult = engine_jax.scenario_thr_mult(scen, task.env.cell_id,
                                                 kk["cong"], rr)
 
@@ -463,32 +507,32 @@ def _scan_rounds_chunked(task: FlTask, hyper, seed, *, policy: str,
 
             def step(carry2, x):
                 params, bstate = carry2
-                cand_mask, t_ud_r, t_ul_r, k_pol, k_perm, lr = x
+                cand, t_ud_r, t_ul_r, k_pol, k_perm, lr = x
                 params, bstate, rt, acc, sel = protocol_round(
-                    params, bstate, cand_mask, t_ud_r, t_ul_r, k_pol,
+                    params, bstate, cand, t_ud_r, t_ul_r, k_pol,
                     k_perm, lr)
                 return (params, bstate), (rt, acc, sel)
 
             (params, bstate), ys = jax.lax.scan(
                 step, (params, bstate),
-                (cand_masks, t_ud, t_ul, kk["pol"], kk["perm"], lr_c))
+                (cands, t_ud, t_ul, kk["pol"], kk["perm"], lr_c))
             return (params, bstate, m_theta, m_gamma), ys
 
         def step(carry2, x):
             params, bstate, m_th, m_ga = carry2
-            cand_mask, mult, k_t, k_g, k_pol, k_perm, k_c, lr = x
+            cand, mult, k_t, k_g, k_pol, k_perm, k_c, lr = x
             t_ud, t_ul = engine_jax.sample_times(
                 task.env.n_samples, m_th * mult, m_ga, eta, model_bits,
                 k_t, k_g, fluctuate=fluctuate)
             params, bstate, rt, acc, sel = protocol_round(
-                params, bstate, cand_mask, t_ud, t_ul, k_pol, k_perm, lr)
+                params, bstate, cand, t_ud, t_ul, k_pol, k_perm, lr)
             m_th, m_ga = engine_jax.churn_step(k_c, m_th, m_ga,
                                                scen.churn_prob)
             return (params, bstate, m_th, m_ga), (rt, acc, sel)
 
         carry2, ys = jax.lax.scan(
             step, (params, bstate, m_theta, m_gamma),
-            (cand_masks, thr_mult, kk["theta"], kk["gamma"], kk["pol"],
+            (cands, thr_mult, kk["theta"], kk["gamma"], kk["pol"],
              kk["perm"], kk["churn"], lr_c))
         return carry2, ys
 
@@ -504,7 +548,8 @@ def _run_fl_one(task: FlTask, model_bits, hyper, eta, seed, *, policy: str,
                 scen: Scenario, n_rounds: int, s_round: int, n_req: int,
                 fluctuate: bool, epochs: int, batch_size: int, cohort: str,
                 use_kernel: bool, cfg: cnn.CnnConfig,
-                chunk_rounds: int | None = None, client_mesh=None):
+                chunk_rounds: int | None = None, client_mesh=None,
+                fused: bool = True, native_perm: bool = False):
     """One (policy, seed) grid point, always through the chunked scan —
     the default is one chunk spanning the whole run, which consumes the
     stream ``_presample`` would draw bit-for-bit (per-round keys), so
@@ -515,24 +560,26 @@ def _run_fl_one(task: FlTask, model_bits, hyper, eta, seed, *, policy: str,
         s_round=s_round, n_req=n_req, eta=eta, model_bits=model_bits,
         fluctuate=fluctuate, epochs=epochs, batch_size=batch_size,
         cohort=cohort, use_kernel=use_kernel, cfg=cfg,
-        client_mesh=client_mesh)
+        client_mesh=client_mesh, fused=fused, native_perm=native_perm)
 
 
 @functools.partial(jax.jit, static_argnames=(
     "policy", "s_round", "epochs", "batch_size", "cohort", "use_kernel",
-    "cfg"))
+    "cfg", "native_perm"))
 def _replay_scan(task: FlTask, hyper, pre: dict, *, policy, s_round, epochs,
-                 batch_size, cohort, use_kernel, cfg):
+                 batch_size, cohort, use_kernel, cfg, native_perm=False):
     return _scan_rounds(task, hyper, pre, policy=policy, s_round=s_round,
                         epochs=epochs, batch_size=batch_size, cohort=cohort,
-                        use_kernel=use_kernel, cfg=cfg)
+                        use_kernel=use_kernel, cfg=cfg,
+                        native_perm=native_perm)
 
 
 def run_replay(task: FlTask, hyper, cand_masks, t_ud, t_ul, pol_keys,
                perm_keys, *, policy: str, s_round: int,
                epochs: int = PAPER_EPOCHS, batch_size: int = PAPER_BATCH,
                cohort: str = "all", use_kernel: bool = False,
-               cfg: cnn.CnnConfig = cnn.CnnConfig()) -> dict:
+               cfg: cnn.CnnConfig = cnn.CnnConfig(),
+               fast_perm: bool | None = None) -> dict:
     """Run R learning-coupled rounds from precomputed inputs (one jit call).
 
     cand_masks: [R, K] bool; t_ud/t_ul: [R, K]; pol_keys/perm_keys: [R]
@@ -548,10 +595,13 @@ def run_replay(task: FlTask, hyper, cand_masks, t_ud, t_ul, pol_keys,
            "t_ul": jnp.asarray(t_ul, jnp.float32),
            "pol_keys": jnp.asarray(pol_keys),
            "perm_keys": jnp.asarray(perm_keys)}
+    native_perm = (_native_perm_auto(task) if fast_perm is None
+                   else bool(fast_perm))
     rts, accs, sels = _replay_scan(task, hyper, pre, policy=policy,
                                    s_round=s_round, epochs=epochs,
                                    batch_size=batch_size, cohort=cohort,
-                                   use_kernel=use_kernel, cfg=cfg)
+                                   use_kernel=use_kernel, cfg=cfg,
+                                   native_perm=native_perm)
     rts = np.asarray(rts)
     return {"round_times": rts, "elapsed": np.cumsum(rts),
             "accuracy": np.asarray(accs), "selected": np.asarray(sels)}
@@ -560,11 +610,12 @@ def run_replay(task: FlTask, hyper, cand_masks, t_ud, t_ul, pol_keys,
 @functools.partial(jax.jit, static_argnames=(
     "policies", "scen", "n_rounds", "s_round", "n_req", "fluctuate",
     "epochs", "batch_size", "cohort", "use_kernel", "cfg", "chunk_rounds",
-    "mesh", "shard"), donate_argnames=("seeds",))
+    "mesh", "shard", "fused", "native_perm"), donate_argnames=("seeds",))
 def _run_grid(task: FlTask, model_bits, hypers, eta, seeds, *,
               policies: tuple[str, ...], scen: Scenario, n_rounds, s_round,
               n_req, fluctuate, epochs, batch_size, cohort, use_kernel, cfg,
-              chunk_rounds=None, mesh=None, shard="grid"):
+              chunk_rounds=None, mesh=None, shard="grid", fused=True,
+              native_perm=False):
     """One jit call for the whole accuracy sweep: the policy axis is
     unrolled statically (each entry vmaps its own selection rule over the
     seed axis); hypers: [P], seeds: [S], donated.
@@ -584,7 +635,8 @@ def _run_grid(task: FlTask, model_bits, hypers, eta, seeds, *,
             _run_fl_one, policy=name, scen=scen, n_rounds=n_rounds,
             s_round=s_round, n_req=n_req, fluctuate=fluctuate, epochs=epochs,
             batch_size=batch_size, cohort=cohort, use_kernel=use_kernel,
-            cfg=cfg, chunk_rounds=chunk_rounds, client_mesh=client_mesh)
+            cfg=cfg, chunk_rounds=chunk_rounds, client_mesh=client_mesh,
+            fused=fused, native_perm=native_perm)
         g = jax.vmap(f, in_axes=(None, None, None, None, 0))
         if mesh is not None and shard == "grid":
             g = dist_sharding.shard_vmapped(g, mesh, sharded_argnums=(4,))
@@ -661,6 +713,8 @@ def accuracy_sweep(scenario: Scenario | str = "paper-baseline",
                    devices=None,
                    shard: str = "grid",
                    chunk_rounds: int | None = None,
+                   fused: bool = True,
+                   fast_perm: bool | None = None,
                    **task_kwargs) -> FlSweepResult:
     """Run the full (policy x seed) accuracy-vs-time grid as ONE jit call.
 
@@ -678,7 +732,13 @@ def accuracy_sweep(scenario: Scenario | str = "paper-baseline",
     splits ("grid" = the seed axis via shard_map, exactly single-device
     results; "clients" = the client axis K of state, draws and data shards
     via GSPMD), ``chunk_rounds`` caps peak memory at O(chunk_rounds · K)
-    per grid point without changing the consumed random stream.
+    per grid point without changing the consumed random stream, ``fused``
+    (default) runs select/schedule/observe as the one-pass fused round
+    (bitwise-identical; ``False`` = the unfused baseline).  ``fast_perm``
+    picks the client-shuffle draw: None (default) auto-selects the native
+    ``jax.random.permutation`` path exactly when every shard is full
+    (see ``make_client_update``); the host reference applies the same
+    rule, so replay parity is preserved either way.
     """
     scen = get_scenario(scenario) if isinstance(scenario, str) else scenario
     if shard not in ("grid", "clients"):
@@ -709,9 +769,9 @@ def accuracy_sweep(scenario: Scenario | str = "paper-baseline",
     if mesh is not None and shard == "clients":
         task = shard_task_for_clients(task, mesh)
 
-    with warnings.catch_warnings():
-        warnings.filterwarnings(            # CPU cannot donate; expected
-            "ignore", message="Some donated buffers were not usable")
+    native_perm = (_native_perm_auto(task) if fast_perm is None
+                   else bool(fast_perm))
+    with suppress_unusable_donation_warnings():
         rts, accs, sels = _run_grid(
             task, jnp.float32(model_bits), jnp.asarray(hypers, jnp.float32),
             jnp.float32(eta), jnp.asarray(g_seeds),
@@ -719,7 +779,8 @@ def accuracy_sweep(scenario: Scenario | str = "paper-baseline",
             s_round=s_round, n_req=math.ceil(n_clients * frac_request),
             fluctuate=fluctuate, epochs=epochs, batch_size=batch_size,
             cohort=cohort, use_kernel=bool(use_kernel), cfg=cfg,
-            chunk_rounds=chunk_rounds, mesh=mesh, shard=shard)
+            chunk_rounds=chunk_rounds, mesh=mesh, shard=shard, fused=fused,
+            native_perm=native_perm)
     n_seeds = len(seeds)
     return FlSweepResult(
         policies=tuple(pol_names), hypers=tuple(hypers), seeds=seeds,
@@ -742,7 +803,8 @@ def run_host_reference(task: FlTask, *,
                        epochs: int = PAPER_EPOCHS,
                        batch_size: int = PAPER_BATCH,
                        model_bits: float | None = None,
-                       fluctuate: bool = True) -> dict:
+                       fluctuate: bool = True,
+                       fast_perm: bool | None = None) -> dict:
     """The disconnected host loop the engine replaces: LocalTrainer +
     aggregation.fedavg + one jitted SGD step per minibatch (the pre-engine
     CnnFlTrainer's dispatch granularity), driven by the SAME presampled
@@ -774,17 +836,23 @@ def run_host_reference(task: FlTask, *,
     lrs = _round_lrs(n_rounds)
     cap = task.part_idx.shape[1]
     pos = jnp.arange(cap)
+    native_perm = (_native_perm_auto(task) if fast_perm is None
+                   else bool(fast_perm))
 
     def client_update_impl(params, kk, rnd):
         # per-epoch permutation + per-batch jitted step: the dispatch
         # granularity of the pre-engine CnnFlTrainer, consuming the exact
-        # random stream of make_client_update (same keys, same argsort)
+        # random stream of make_client_update (same keys, same shuffle —
+        # argsort idiom or, for full shards, the native permutation draw)
         key = jax.random.fold_in(pre["perm_keys"][rnd], kk)
         idx, count = task.part_idx[kk], int(task.part_count[kk])
         p = params
         for ek in jax.random.split(key, epochs):
-            r = jax.random.uniform(ek, (cap,)) + 2.0 * (pos >= count)
-            perm = idx[jnp.argsort(r)]
+            if native_perm:
+                perm = idx[jax.random.permutation(ek, cap)]
+            else:
+                r = jax.random.uniform(ek, (cap,)) + 2.0 * (pos >= count)
+                perm = idx[jnp.argsort(r)]
             for b in range(cap // batch_size):
                 if (b + 1) * batch_size <= count:
                     bidx = perm[b * batch_size:(b + 1) * batch_size]

@@ -1,0 +1,200 @@
+"""Pallas TPU kernel: one fused bandit round over the K-sized BanditState.
+
+The per-round hot path of every sweep — policy scoring, candidate-masked
+Algorithm-1 / top-S selection, the realized upload schedule, and the
+``observe`` statistics update — currently dispatches ~a dozen small K-sized
+XLA ops per round, each round-tripping the [K] state arrays through HBM.
+This kernel performs the whole round in a single ``pallas_call``: every
+state array streams HBM -> VMEM once, the S-step selection loop and the
+schedule run entirely on VMEM-resident values, and the updated state
+streams back out — the roofline minimum of ~2 passes over the state.
+
+Scoring arithmetic is ``core.bandit_jax.policy_scores`` (the single shared
+definition, pure jnp, legal inside a kernel body) and the state update
+mirrors ``core.bandit_jax.observe`` expression-for-expression, so kernel
+outputs are bitwise-identical to the compacted jnp reference
+(``kernels/ref.py::bandit_round_ref``) — the CI bench-smoke gate
+(benchmarks/bench_round_kernel.py) fails on any divergence.
+
+Selection is *sort-free*: S iterations of masked argmax (lowest index wins
+ties, the numpy reference's convention), not a top-k sort.
+
+Layout notes: all per-arm arrays are 1-D [K] padded to a multiple of
+``BLOCK`` (padded arms are never candidates, so they are inert); the ring
+buffers ride along as [K, W].  The kernel keeps the whole state resident
+(grid=(1,)): ~16 input vectors + 2 [K, W] ring buffers + ~22 output
+vectors ≈ 190 B/arm at W=5, so a 16 MB VMEM core bounds K at roughly
+8·10⁴ arms; larger K should shard clients first (``shard="clients"``).  On CPU this
+kernel exists for interpret-mode parity testing only — ops.bandit_round
+routes real CPU work to the compacted jnp reference.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import bandit_jax
+
+BLOCK = 1024        # [K] padding granularity; multiple of 8*128
+
+
+def _round_kernel(nsel_ref, sumud_ref, sumul_ref, sumtinc_ref, lastud_ref,
+                  lastul_ref, histud_ref, histul_ref, histn_ref, discn_ref,
+                  discud_ref, discul_ref, total_ref, disctotal_ref, mask_ref,
+                  tud_ref, tul_ref, rand_ref, hyper_ref,
+                  o_nsel, o_sumud, o_sumul, o_sumtinc, o_lastud, o_lastul,
+                  o_histud, o_histul, o_histn, o_discn, o_discud, o_discul,
+                  o_total, o_disctotal, o_sel, o_rt,
+                  *, policy: str, s_round: int, w: int, decay: float):
+    n_sel = nsel_ref[...]
+    sum_ud, sum_ul = sumud_ref[...], sumul_ref[...]
+    sum_tinc = sumtinc_ref[...]
+    last_ud, last_ul = lastud_ref[...], lastul_ref[...]
+    hist_ud, hist_ul = histud_ref[...], histul_ref[...]
+    hist_n = histn_ref[...]
+    disc_n, disc_ud, disc_ul = discn_ref[...], discud_ref[...], discul_ref[...]
+    total, disc_total = total_ref[0], disctotal_ref[0]
+    mask = mask_ref[...] != 0
+    t_ud, t_ul, rand = tud_ref[...], tul_ref[...], rand_ref[...]
+    hyper = hyper_ref[0]
+    kp = n_sel.shape[0]
+
+    # ---- score (shared arithmetic with the jnp paths) --------------------
+    obs = dict(n_sel=n_sel, sum_ud=sum_ud, sum_ul=sum_ul, sum_tinc=sum_tinc,
+               last_ud=last_ud, last_ul=last_ul,
+               hist_sum_ud=hist_ud.sum(1), hist_sum_ul=hist_ul.sum(1),
+               hist_n=hist_n, disc_n=disc_n, disc_ud=disc_ud,
+               disc_ul=disc_ul)
+    kind, a, b = bandit_jax.policy_scores(policy, obs, total, disc_total,
+                                          t_ud, t_ul, rand, hyper)
+
+    # ---- sort-free masked selection (S x argmax on VMEM values): the
+    # shared core primitives, here over the full padded [Kp] arrays so the
+    # returned slots ARE client indices -------------------------------------
+    if kind == "greedy":
+        sel = bandit_jax.greedy_slots(a, b, mask, s_round)
+    else:
+        sel = bandit_jax.top_slots(a, mask, s_round)
+
+    # ---- realized schedule (same per-step math as schedule_selected) -----
+    valid = sel >= 0
+    safe = jnp.where(valid, sel, 0)
+    sud = jnp.where(valid, t_ud[safe], 0.0)
+    sul = jnp.where(valid, t_ul[safe], 0.0)
+    t_d_true = jnp.max(jnp.where(valid, sul, 0.0))
+
+    def tstep(i, t):
+        t2 = jnp.maximum(t, t_d_true + sud[i]) + sul[i]
+        return jnp.where(valid[i], t2, t)
+    round_time = jax.lax.fori_loop(0, s_round, tstep, t_d_true)
+
+    def istep(i, carry):
+        t, td, incs = carry
+        ntd = jnp.maximum(td, sul[i])
+        inc = (ntd - td) + jnp.maximum(sud[i] - (t - td), 0.0) + sul[i]
+        incs = incs.at[i].set(jnp.where(valid[i], inc, 0.0))
+        return (jnp.where(valid[i], t + inc, t),
+                jnp.where(valid[i], ntd, td), incs)
+    _, _, incs = jax.lax.fori_loop(
+        0, s_round, istep,
+        (jnp.float32(0), jnp.float32(0), jnp.zeros((s_round,), jnp.float32)))
+
+    # ---- observe (expression-for-expression core.bandit_jax.observe) -----
+    drop = jnp.where(valid, safe, kp)
+    slot = n_sel[jnp.clip(sel, 0, kp - 1)] % w
+    o_nsel[...] = n_sel.at[drop].add(1, mode="drop")
+    o_sumud[...] = sum_ud.at[drop].add(sud, mode="drop")
+    o_sumul[...] = sum_ul.at[drop].add(sul, mode="drop")
+    o_sumtinc[...] = sum_tinc.at[drop].add(incs, mode="drop")
+    o_lastud[...] = last_ud.at[drop].set(sud, mode="drop")
+    o_lastul[...] = last_ul.at[drop].set(sul, mode="drop")
+    o_histud[...] = hist_ud.at[drop, slot].set(sud, mode="drop")
+    o_histul[...] = hist_ul.at[drop, slot].set(sul, mode="drop")
+    o_histn[...] = jnp.minimum(hist_n.at[drop].add(1, mode="drop"), w)
+    o_total[0] = total + valid.sum().astype(jnp.int32)
+    if float(decay) == 1.0:     # static: stationary policies skip the decay
+        o_discn[...], o_discud[...], o_discul[...] = disc_n, disc_ud, disc_ul
+        o_disctotal[0] = disc_total
+    else:
+        o_discn[...] = (disc_n * decay).at[drop].add(1.0, mode="drop")
+        o_discud[...] = (disc_ud * decay).at[drop].add(sud, mode="drop")
+        o_discul[...] = (disc_ul * decay).at[drop].add(sul, mode="drop")
+        o_disctotal[0] = disc_total * decay + valid.sum(dtype=jnp.float32)
+    o_sel[...] = sel
+    o_rt[0] = round_time
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "s_round", "decay",
+                                             "interpret"))
+def bandit_round_pallas(state, cand_idx, t_ud, t_ul, rand, hyper, *,
+                        policy: str, s_round: int, decay: float = 1.0,
+                        interpret: bool = True):
+    """Fused round on a BanditState; same contract as ref.bandit_round_ref
+    (``cand_idx``: [C] sorted, >= K padding).  Returns (state, sel, rt)."""
+    k = t_ud.shape[0]
+    w = state.hist_ud.shape[1]
+    pad = (-k) % BLOCK
+    kp = k + pad
+
+    def pad1(x):
+        return jnp.pad(x, (0, pad)) if pad else x
+
+    # candidate mask at padded length; >= K entries (and the padded arms
+    # themselves) stay out of the candidate set
+    mask = jnp.zeros(kp, jnp.int32).at[
+        jnp.where(cand_idx < k, cand_idx, kp)].set(1, mode="drop")
+    rand = jnp.zeros(k, jnp.float32) if rand is None else rand
+
+    spec1 = pl.BlockSpec((kp,), lambda i: (0,))
+    spec2 = pl.BlockSpec((kp, w), lambda i: (0, 0))
+    spec_s = pl.BlockSpec((1,), lambda i: (0,))
+    spec_sel = pl.BlockSpec((s_round,), lambda i: (0,))
+
+    out_shape = (
+        jax.ShapeDtypeStruct((kp,), jnp.int32),       # n_sel
+        *(jax.ShapeDtypeStruct((kp,), jnp.float32) for _ in range(5)),
+        jax.ShapeDtypeStruct((kp, w), jnp.float32),   # hist_ud
+        jax.ShapeDtypeStruct((kp, w), jnp.float32),   # hist_ul
+        jax.ShapeDtypeStruct((kp,), jnp.int32),       # hist_n
+        *(jax.ShapeDtypeStruct((kp,), jnp.float32) for _ in range(3)),
+        jax.ShapeDtypeStruct((1,), jnp.int32),        # total
+        jax.ShapeDtypeStruct((1,), jnp.float32),      # disc_total
+        jax.ShapeDtypeStruct((s_round,), jnp.int32),  # sel
+        jax.ShapeDtypeStruct((1,), jnp.float32),      # round_time
+    )
+    out_specs = (spec1, spec1, spec1, spec1, spec1, spec1, spec2, spec2,
+                 spec1, spec1, spec1, spec1, spec_s, spec_s, spec_sel,
+                 spec_s)
+    in_specs = [spec1] * 6 + [spec2, spec2] + [spec1] * 4 + \
+        [spec_s, spec_s] + [spec1] * 4 + [spec_s]
+
+    outs = pl.pallas_call(
+        functools.partial(_round_kernel, policy=policy, s_round=s_round,
+                          w=w, decay=float(decay)),
+        grid=(1,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(pad1(state.n_sel), pad1(state.sum_ud), pad1(state.sum_ul),
+      pad1(state.sum_tinc), pad1(state.last_ud), pad1(state.last_ul),
+      jnp.pad(state.hist_ud, ((0, pad), (0, 0))) if pad else state.hist_ud,
+      jnp.pad(state.hist_ul, ((0, pad), (0, 0))) if pad else state.hist_ul,
+      pad1(state.hist_n), pad1(state.disc_n), pad1(state.disc_ud),
+      pad1(state.disc_ul), state.total.reshape(1),
+      state.disc_total.reshape(1), mask,
+      pad1(t_ud.astype(jnp.float32)), pad1(t_ul.astype(jnp.float32)),
+      pad1(rand.astype(jnp.float32)),
+      jnp.asarray(hyper, jnp.float32).reshape(1))
+
+    new_state = state.replace(
+        n_sel=outs[0][:k], sum_ud=outs[1][:k], sum_ul=outs[2][:k],
+        sum_tinc=outs[3][:k], last_ud=outs[4][:k], last_ul=outs[5][:k],
+        hist_ud=outs[6][:k], hist_ul=outs[7][:k], hist_n=outs[8][:k],
+        disc_n=outs[9][:k], disc_ud=outs[10][:k], disc_ul=outs[11][:k],
+        total=outs[12][0], disc_total=outs[13][0])
+    return new_state, outs[14], outs[15][0]

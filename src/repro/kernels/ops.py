@@ -14,14 +14,44 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import bandit_round as _bandit_round
 from repro.kernels import fedavg as _fedavg
 from repro.kernels import flash_attention as _flash
+from repro.kernels import ref as _ref
 from repro.kernels import rg_lru as _rg
 from repro.kernels import ucb_score as _ucb
 
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def bandit_round(state, cand_idx, t_ud, t_ul, rand, hyper, *, policy: str,
+                 s_round: int, decay: float = 1.0,
+                 use_kernel: bool | None = None,
+                 interpret: bool | None = None):
+    """One fused bandit round (score -> select -> schedule -> observe) on a
+    core.bandit_jax.BanditState; returns ``(new_state, sel, round_time)``.
+
+    Auto-routing (the fedavg/ucb_score convention): on TPU the round runs
+    as the single-pass Pallas kernel (kernels/bandit_round.py); elsewhere
+    it runs the candidate-compacted jnp reference
+    (kernels/ref.py::bandit_round_ref) — interpret-mode Pallas executes the
+    body op-by-op in Python and is only useful for parity testing, so the
+    CPU production path is the reference itself.  Both paths are
+    bitwise-identical (selections, times, state) to each other and to the
+    unfused select/schedule/observe pipeline.
+    """
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if not use_kernel:
+        return _ref.bandit_round_ref(state, cand_idx, t_ud, t_ul, rand,
+                                     hyper, policy=policy, s_round=s_round,
+                                     decay=decay)
+    interpret = _default_interpret() if interpret is None else interpret
+    return _bandit_round.bandit_round_pallas(
+        state, cand_idx, t_ud, t_ul, rand, hyper, policy=policy,
+        s_round=s_round, decay=decay, interpret=interpret)
 
 
 def ucb_scores(sums, n_sel, total, alpha: float = 1000.0,

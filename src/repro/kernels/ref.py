@@ -1,4 +1,10 @@
-"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+``bandit_round_ref`` doubles as the *production* CPU path of the fused
+bandit round (ops.bandit_round routes here off-TPU): it is not a slow
+mirror but the candidate-compacted fast formulation, bitwise-identical to
+the kernel and to the unfused select/schedule/observe pipeline.
+"""
 
 from __future__ import annotations
 
@@ -34,6 +40,56 @@ def flash_attention_ref(q, k, v, causal: bool = True):
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
     return o.astype(q.dtype)
+
+
+def bandit_round_ref(state, cand_idx, t_ud, t_ul, rand, hyper, *,
+                     policy: str, s_round: int, decay: float = 1.0):
+    """One fused bandit round (score -> select -> schedule -> observe) on a
+    core.bandit_jax.BanditState — the jnp oracle of
+    kernels/bandit_round.py and the CPU fast path.
+
+    ``cand_idx``: [C] int32 sorted candidate indices, >= K entries padding.
+    Instead of S masked passes over all K arms, every policy's statistics
+    are gathered once for the C candidates and Algorithm 1 / sort-free
+    top-S (the shared ``core.bandit_jax.greedy_slots`` / ``top_slots``
+    primitives, on the [C] slice) runs compacted; the winning slots map
+    back through ``cand_idx`` — sorted candidates make the lowest-slot
+    tie-break equal the numpy lowest-client-index rule.
+    Returns ``(new_state, sel [s_round], round_time)``.
+    """
+    from repro.core import bandit_jax
+
+    k = t_ud.shape[0]
+    cvalid = cand_idx < k
+    safe_c = jnp.where(cvalid, cand_idx, 0)
+
+    def col(name):
+        # gather-then-reduce for the ring buffers (same per-row sum as
+        # state_obs's reduce-then-gather, without touching all K rows)
+        if name == "hist_sum_ud":
+            return state.hist_ud[safe_c].sum(1)
+        if name == "hist_sum_ul":
+            return state.hist_ul[safe_c].sum(1)
+        return getattr(state, name)[safe_c]
+
+    obs = {name: col(name) for name in bandit_jax.POLICY_STATS[policy]}
+    kind, a, b = bandit_jax.policy_scores(
+        policy, obs, state.total, state.disc_total,
+        None if t_ud is None else t_ud[safe_c],
+        None if t_ul is None else t_ul[safe_c],
+        None if rand is None else rand[safe_c], hyper)
+    if kind == "score":
+        slots = bandit_jax.top_slots(a, cvalid, s_round)
+    else:
+        slots = bandit_jax.greedy_slots(a, b, cvalid, s_round)
+    sel = jnp.where(slots >= 0, cand_idx[jnp.where(slots >= 0, slots, 0)],
+                    -1).astype(jnp.int32)
+
+    round_time, incs = bandit_jax.schedule_selected(sel, t_ud, t_ul)
+    safe = jnp.where(sel >= 0, sel, 0)
+    state = bandit_jax.observe(state, sel, t_ud[safe], t_ul[safe], incs,
+                               decay=decay)
+    return state, sel, round_time
 
 
 def rg_lru_ref(a, b):

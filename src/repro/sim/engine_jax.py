@@ -37,7 +37,6 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +47,7 @@ from repro.distributed import sharding as dist_sharding
 from repro.sim import network
 from repro.sim.resources import PAPER_MODEL_BITS
 from repro.sim.scenarios import (CAP_HIGH, CAP_LOW, Scenario, get_scenario)
+from repro.utils.compat import suppress_unusable_donation_warnings
 
 SQRT2 = math.sqrt(2.0)
 _P_LO = 0.5 * (1.0 + math.erf(-1.0 / SQRT2))     # Phi(-1)
@@ -133,37 +133,10 @@ def _throughput_bps(dist_m: jnp.ndarray) -> jnp.ndarray:
 # Realized schedule math for a -1-padded selection (Sect. II / Eq. 1).
 # ---------------------------------------------------------------------------
 
-def _schedule(sel: jnp.ndarray, t_ud: jnp.ndarray,
-              t_ul: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns (round_time, incs[S]) for selection ``sel`` ([S], -1 padded).
-
-    round_time is the physically realized schedule (multicast distribution
-    T_d = max t_UL, parallel local update, sequential upload in order) —
-    bandit.true_round_time; incs is the per-client Eq. (1) accumulation the
-    server records as the T_inc observation.
-    """
-    valid = sel >= 0
-    safe = jnp.where(valid, sel, 0)
-    ud = jnp.where(valid, t_ud[safe], 0.0)
-    ul = jnp.where(valid, t_ul[safe], 0.0)
-
-    t_d = jnp.max(jnp.where(valid, ul, 0.0))
-    def tbody(t, x):
-        ud_k, ul_k, v = x
-        t2 = jnp.maximum(t, t_d + ud_k) + ul_k
-        return jnp.where(v, t2, t), None
-    round_time, _ = jax.lax.scan(tbody, t_d, (ud, ul, valid))
-
-    def ibody(carry, x):
-        t, td = carry
-        ud_k, ul_k, v = x
-        ntd = jnp.maximum(td, ul_k)
-        inc = (ntd - td) + jnp.maximum(ud_k - (t - td), 0.0) + ul_k
-        return ((jnp.where(v, t + inc, t), jnp.where(v, ntd, td)),
-                jnp.where(v, inc, 0.0))
-    _, incs = jax.lax.scan(ibody, (jnp.float32(0), jnp.float32(0)),
-                           (ud, ul, valid))
-    return round_time, incs
+# The realized-schedule math moved to core.bandit_jax.schedule_selected so
+# the fused round (kernels/ref.py, kernels/bandit_round.py) shares the one
+# definition; this alias keeps the engines' historical entry point.
+_schedule = bandit_jax.schedule_selected
 
 
 def _switch_select(policy_idx, s_round: int):
@@ -255,14 +228,31 @@ class EnvArrays:
         )
 
 
+def _cand_perms_from_keys(keys: jnp.ndarray, k: int,
+                          n_req: int) -> jnp.ndarray:
+    """[R', n_req] Resource-Request candidate draws (one permutation prefix
+    per round key) — the single source both candidate encodings derive
+    from, so mask- and index-consumers see the same subsets."""
+    return jax.vmap(lambda kk: jax.random.permutation(kk, k)[:n_req])(keys)
+
+
 def _cand_masks_from_keys(keys: jnp.ndarray, k: int,
                           n_req: int) -> jnp.ndarray:
     """[R', K] bool Resource-Request candidate subsets from per-round keys
     (``keys``: [R'] PRNG keys, one per round)."""
     r = keys.shape[0]
-    perms = jax.vmap(lambda kk: jax.random.permutation(kk, k)[:n_req])(keys)
+    perms = _cand_perms_from_keys(keys, k, n_req)
     return jnp.zeros((r, k), bool).at[
         jnp.arange(r)[:, None], perms].set(True)
+
+
+def _cand_sorted_from_keys(keys: jnp.ndarray, k: int,
+                           n_req: int) -> jnp.ndarray:
+    """[R', n_req] int32 *sorted* candidate indices from per-round keys —
+    the fused round's candidate encoding (sorted so the compacted argmax
+    tie-break equals the numpy reference's lowest-client-index rule)."""
+    return jnp.sort(_cand_perms_from_keys(keys, k, n_req),
+                    axis=-1).astype(jnp.int32)
 
 
 def _cand_masks(key: jnp.ndarray, n_rounds: int, k: int,
@@ -349,11 +339,18 @@ def _client_constrain(tree, client_mesh, client_dim: int = 0):
 def _run_one(env: EnvArrays, model_bits, hyper, eta, seed,
              *, policy: str, scen: Scenario, n_rounds: int, s_round: int,
              n_req: int, fluctuate: bool, chunk_rounds: int | None = None,
-             client_mesh=None):
+             client_mesh=None, fused: bool = True):
     """One grid point: the full protocol over rounds.  Returns [R] round
     times.  ``policy`` and the scenario dynamics are static — the sweep
     unrolls the policy axis so each compiled branch runs only its own
     selection rule, and switched-off dynamics are compiled away entirely.
+
+    ``fused`` (default) runs each round through the one-pass fused round
+    (core.bandit_jax.make_round_fn -> kernels/ops.bandit_round: candidates
+    compacted before selection, Pallas kernel on TPU); ``fused=False`` is
+    the static fallback (mask-based select_fn + schedule + observe).  The
+    two are bitwise-identical in selections, round times and state —
+    pinned by tests/test_bandit_round.py.
 
     The round axis runs as an outer scan over chunks of ``chunk_rounds``
     rounds (default: one chunk = the whole run).  Each chunk pre-samples
@@ -377,8 +374,31 @@ def _run_one(env: EnvArrays, model_bits, hyper, eta, seed,
     state0 = _client_constrain(bandit_jax.BanditState.create(k), client_mesh)
     k_cand, k_theta, k_gamma, k_pol, k_cong, k_churn = jax.random.split(
         jax.random.PRNGKey(seed), 6)
-    select_fn = bandit_jax.make_select_fn(policy, s_round)
-    decay = bandit_jax.policy_decay(policy)
+
+    if fused:
+        round_fn = bandit_jax.make_round_fn(policy, s_round)
+
+        def one_round(state, cand, t_ud_r, t_ul_r, kp):
+            state, _sel, round_time = round_fn(state, cand, kp, t_ud_r,
+                                               t_ul_r, hyper)
+            return state, round_time
+
+        def round_cands(keys):
+            # sorted indices, not masks — the fused round's encoding
+            return _cand_sorted_from_keys(keys, k, n_req)
+    else:
+        select_fn = bandit_jax.make_select_fn(policy, s_round)
+        decay = bandit_jax.policy_decay(policy)
+
+        def one_round(state, cand, t_ud_r, t_ul_r, kp):
+            state, round_time, _sel = _round(state, cand, t_ud_r, t_ul_r,
+                                             select_fn, hyper, kp,
+                                             decay=decay)
+            return state, round_time
+
+        def round_cands(keys):
+            return _client_constrain(_cand_masks_from_keys(keys, k, n_req),
+                                     client_mesh, client_dim=1)
 
     keys = {name: _per_round_keys(root, n_rounds, n_chunks)
             for name, root in [("cand", k_cand), ("theta", k_theta),
@@ -390,9 +410,7 @@ def _run_one(env: EnvArrays, model_bits, hyper, eta, seed,
     def chunk_body(carry, xs):
         state, mean_theta, mean_gamma = carry
         kk, rr = xs
-        cand_masks = _client_constrain(
-            _cand_masks_from_keys(kk["cand"], k, n_req), client_mesh,
-            client_dim=1)
+        cands = round_cands(kk["cand"])
         thr_mult = scenario_thr_mult(scen, env.cell_id, kk["cong"], rr)
 
         if scen.churn_prob == 0.0:
@@ -404,31 +422,27 @@ def _run_one(env: EnvArrays, model_bits, hyper, eta, seed,
                 client_dim=1)
 
             def step(state, x):
-                cand_mask, t_ud_r, t_ul_r, kp = x
-                state, round_time, _ = _round(state, cand_mask, t_ud_r,
-                                              t_ul_r, select_fn, hyper, kp,
-                                              decay=decay)
-                return state, round_time
+                cand, t_ud_r, t_ul_r, kp = x
+                return one_round(state, cand, t_ud_r, t_ul_r, kp)
             state, round_times = jax.lax.scan(
-                step, state, (cand_masks, t_ud, t_ul, kk["pol"]))
+                step, state, (cands, t_ud, t_ul, kk["pol"]))
             return (state, mean_theta, mean_gamma), round_times
 
         # churn: client means evolve between rounds, sample in the scan
         def step(carry2, x):
             state, m_theta, m_gamma = carry2
-            cand_mask, mult, k_t, k_g, kp, kc = x
+            cand, mult, k_t, k_g, kp, kc = x
             t_ud, t_ul = sample_times(env.n_samples, m_theta * mult,
                                       m_gamma, eta, model_bits, k_t, k_g,
                                       fluctuate=fluctuate)
-            state, round_time, _ = _round(state, cand_mask, t_ud, t_ul,
-                                          select_fn, hyper, kp, decay=decay)
+            state, round_time = one_round(state, cand, t_ud, t_ul, kp)
             m_theta, m_gamma = churn_step(kc, m_theta, m_gamma,
                                           scen.churn_prob)
             return (state, m_theta, m_gamma), round_time
 
         carry2, round_times = jax.lax.scan(
             step, (state, mean_theta, mean_gamma),
-            (cand_masks, thr_mult, kk["theta"], kk["gamma"], kk["pol"],
+            (cands, thr_mult, kk["theta"], kk["gamma"], kk["pol"],
              kk["churn"]))
         return carry2, round_times
 
@@ -439,11 +453,12 @@ def _run_one(env: EnvArrays, model_bits, hyper, eta, seed,
 
 @functools.partial(jax.jit, static_argnames=(
     "policies", "scen", "n_rounds", "s_round", "n_req", "fluctuate",
-    "chunk_rounds", "mesh", "shard"), donate_argnames=("eta", "seed"))
+    "chunk_rounds", "mesh", "shard", "fused"),
+    donate_argnames=("eta", "seed"))
 def _run_grid(env: EnvArrays, model_bits, hypers, eta, seed,
               *, policies: tuple[str, ...], scen: Scenario, n_rounds,
               s_round, n_req, fluctuate, chunk_rounds=None, mesh=None,
-              shard="grid"):
+              shard="grid", fused=True):
     """One jit call for the whole sweep: the policy axis is unrolled
     statically (each entry vmaps its own selection rule over the flattened
     [E*S] eta/seed axes); hypers: [P], eta/seed: [E*S], donated.
@@ -461,7 +476,7 @@ def _run_grid(env: EnvArrays, model_bits, hypers, eta, seed,
                               n_rounds=n_rounds, s_round=s_round,
                               n_req=n_req, fluctuate=fluctuate,
                               chunk_rounds=chunk_rounds,
-                              client_mesh=client_mesh)
+                              client_mesh=client_mesh, fused=fused)
         g = jax.vmap(f, in_axes=(None, None, None, 0, 0))
         if mesh is not None and shard == "grid":
             g = dist_sharding.shard_vmapped(g, mesh, sharded_argnums=(3, 4))
@@ -514,7 +529,8 @@ def sweep(scenario: Scenario | str = "paper-baseline",
           *,
           devices=None,
           shard: str = "grid",
-          chunk_rounds: int | None = None) -> SweepResult:
+          chunk_rounds: int | None = None,
+          fused: bool = True) -> SweepResult:
     """Run the full (policy x eta x seed) grid as ONE jit call.
 
     ``policies`` entries are names or (name, hyper) pairs — the hyper is the
@@ -537,6 +553,12 @@ def sweep(scenario: Scenario | str = "paper-baseline",
         capping peak memory at O(chunk_rounds * K) per grid point; must
         divide ``n_rounds``.  Any chunk size consumes the identical
         per-round random stream, so results do not change.
+    ``fused``
+        Run each round through the fused one-pass round kernel/reference
+        (kernels/bandit_round.py via kernels/ops.bandit_round; default) —
+        bitwise-identical results, ~2-4x round throughput at large K.
+        ``fused=False`` keeps the unfused select/schedule/observe pipeline
+        (the baseline benchmarks/bench_round_kernel.py measures against).
     """
     scenario = get_scenario(scenario) if isinstance(scenario, str) else scenario
     if shard not in ("grid", "clients"):
@@ -570,11 +592,7 @@ def sweep(scenario: Scenario | str = "paper-baseline",
     if mesh is not None and shard == "clients":
         env_arrays = dist_sharding.shard_leading(env_arrays, mesh)
 
-    with warnings.catch_warnings():
-        # grid arrays are donated for the multi-device path; CPU cannot
-        # donate and warns — that's expected, not actionable
-        warnings.filterwarnings(
-            "ignore", message="Some donated buffers were not usable")
+    with suppress_unusable_donation_warnings():
         rts = _run_grid(
             env_arrays, jnp.float32(model_bits),
             jnp.asarray(hypers, jnp.float32), jnp.asarray(g_eta),
@@ -582,7 +600,7 @@ def sweep(scenario: Scenario | str = "paper-baseline",
             policies=tuple(pol_names), scen=scenario, n_rounds=n_rounds,
             s_round=s_round, n_req=math.ceil(n_clients * frac_request),
             fluctuate=fluctuate, chunk_rounds=chunk_rounds, mesh=mesh,
-            shard=shard)
+            shard=shard, fused=fused)
     rts = np.asarray(rts)[:, :n_grid].reshape(
         len(pol_names), len(etas), len(seeds), n_rounds)
     return SweepResult(policies=tuple(pol_names), hypers=tuple(hypers),

@@ -1,0 +1,22 @@
+"""Small runtime/compat helpers shared across the engines."""
+
+from __future__ import annotations
+
+import contextlib
+import warnings
+
+
+@contextlib.contextmanager
+def suppress_unusable_donation_warnings():
+    """Silence XLA's "Some donated buffers were not usable" warning.
+
+    Both sweep engines donate their grid arrays so the multi-device path
+    can reuse the buffers; CPU backends cannot honor the donation and warn
+    once per compile.  That warning is expected and not actionable, so the
+    engines wrap their jit entry calls in this context manager (defined
+    once here instead of copy-pasting the filter).
+    """
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        yield

@@ -1,0 +1,289 @@
+"""Parity web for the fused bandit round (kernels/bandit_round.py +
+kernels/ref.py::bandit_round_ref, routed by kernels/ops.bandit_round).
+
+Three anchors, each bitwise where floats allow:
+
+  1. fused round == numpy FederatedServer trajectories (common random
+     numbers) for every deterministic policy — the paper-fidelity anchor;
+  2. fused round == the unfused select/schedule/observe pipeline over a
+     multi-round run, selections/round-times/full-state identical, for all
+     8 policies (incl. random: both draw the same uniform stream) — plus
+     the tie-break cases the compaction must preserve (duplicate scores,
+     cold-start BIG sentinels, S >= |candidates|);
+  3. Pallas kernel (interpret mode) == jnp reference, full state.
+
+The sharded/chunked twins live in tests/test_sharded_sweep.py (the fused
+path is the engines' default, so every equivalence there exercises it).
+"""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from test_bandit_jax import _replay_inputs
+
+from repro.core import bandit_jax
+from repro.core.bandit import make_policy
+from repro.fl.server import FederatedServer, FLConfig
+from repro.sim import engine_jax
+from repro.sim.network import make_network_env
+from repro.sim.resources import PAPER_MODEL_BITS, ResourceModel
+
+# every policy whose selection is deterministic given the state (random
+# consumes a PRNG stream the numpy server draws differently)
+DETERMINISTIC = [p for p in bandit_jax.POLICY_NAMES if p != "random"]
+
+
+def _fused_loop(policy, masks, t_ud, t_ul, s_round, n_cand, key=None,
+                **round_kw):
+    """Drive the fused round over presampled inputs; returns (sels, rts,
+    final state)."""
+    k = t_ud.shape[1]
+    round_fn = bandit_jax.make_round_fn(policy, s_round, **round_kw)
+    hyper = jnp.float32(bandit_jax.DEFAULT_HYPERS[policy])
+    state = bandit_jax.BanditState.create(k)
+    key = jax.random.PRNGKey(0) if key is None else key
+    sels, rts = [], []
+    for r in range(masks.shape[0]):
+        cand = bandit_jax.cand_idx_from_mask(jnp.asarray(masks[r]), n_cand)
+        key, sub = jax.random.split(key)
+        state, sel, rt = round_fn(state, cand, sub,
+                                  jnp.asarray(t_ud[r], jnp.float32),
+                                  jnp.asarray(t_ul[r], jnp.float32), hyper)
+        sels.append(np.asarray(sel))
+        rts.append(float(rt))
+    return np.stack(sels), np.asarray(rts), state
+
+
+# ---------------------------------------------------------------------------
+# 1. fused round vs the numpy FederatedServer (common random numbers)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", DETERMINISTIC)
+def test_fused_round_matches_server(policy):
+    n, s_round, rounds = 40, 4, 25
+    env = make_network_env(n, np.random.default_rng(7))
+    res = ResourceModel(env, eta=1.5, model_bits=PAPER_MODEL_BITS)
+    cfg = FLConfig(n_clients=n, frac_request=0.25, s_round=s_round, seed=3)
+
+    srv = FederatedServer(cfg, make_policy(policy, n, s_round), res)
+    srv.run(rounds)
+
+    masks, t_ud, t_ul = _replay_inputs(cfg, res, rounds)
+    sels, rts, _ = _fused_loop(policy, masks, t_ud, t_ul, s_round,
+                               n_cand=math.ceil(n * cfg.frac_request))
+
+    for r, rec in enumerate(srv.history):
+        got = [int(x) for x in sels[r] if int(x) >= 0]
+        assert got == rec.selected, f"round {r}: {got} != {rec.selected}"
+    want_rt = np.array([rec.round_time for rec in srv.history])
+    np.testing.assert_allclose(rts, want_rt, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# 2. fused vs unfused pipeline, bitwise (selections, times, full state)
+# ---------------------------------------------------------------------------
+
+def _both_paths(policy, k=50, s_round=5, n_cand=12, rounds=20, seed=0):
+    key = jax.random.PRNGKey(seed)
+    kc, kt, kg, kp = jax.random.split(key, 4)
+    cand_keys = jax.random.split(kc, rounds)
+    masks = np.asarray(engine_jax._cand_masks_from_keys(cand_keys, k, n_cand))
+    t_ud = np.asarray(jax.random.uniform(kt, (rounds, k), jnp.float32,
+                                         1.0, 100.0))
+    t_ul = np.asarray(jax.random.uniform(kg, (rounds, k), jnp.float32,
+                                         1.0, 100.0))
+    pol_keys = jax.random.split(kp, rounds)
+
+    select_fn = bandit_jax.make_select_fn(policy, s_round)
+    decay = bandit_jax.policy_decay(policy)
+    hyper = jnp.float32(bandit_jax.DEFAULT_HYPERS[policy])
+    state = bandit_jax.BanditState.create(k)
+    base_sels, base_rts = [], []
+    for r in range(rounds):
+        state, rt, sel = engine_jax._round(
+            state, jnp.asarray(masks[r]), jnp.asarray(t_ud[r]),
+            jnp.asarray(t_ul[r]), select_fn, hyper, pol_keys[r], decay=decay)
+        base_sels.append(np.asarray(sel))
+        base_rts.append(float(rt))
+
+    round_fn = bandit_jax.make_round_fn(policy, s_round)
+    fstate = bandit_jax.BanditState.create(k)
+    fused_sels, fused_rts = [], []
+    for r in range(rounds):
+        cand = engine_jax._cand_sorted_from_keys(cand_keys[r][None], k,
+                                                 n_cand)[0]
+        fstate, sel, rt = round_fn(fstate, cand, pol_keys[r],
+                                   jnp.asarray(t_ud[r]),
+                                   jnp.asarray(t_ul[r]), hyper)
+        fused_sels.append(np.asarray(sel))
+        fused_rts.append(float(rt))
+    return (np.stack(base_sels), np.asarray(base_rts), state,
+            np.stack(fused_sels), np.asarray(fused_rts), fstate)
+
+
+@pytest.mark.parametrize("policy", bandit_jax.POLICY_NAMES)
+def test_fused_matches_fallback_bitwise(policy):
+    b_sel, b_rt, b_st, f_sel, f_rt, f_st = _both_paths(policy)
+    np.testing.assert_array_equal(f_sel, b_sel)
+    np.testing.assert_array_equal(f_rt, b_rt)
+    for f in dataclasses.fields(b_st):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(b_st, f.name)),
+            np.asarray(getattr(f_st, f.name)),
+            err_msg=f"state.{f.name} diverged ({policy})")
+
+
+@pytest.mark.parametrize("policy", DETERMINISTIC)
+def test_duplicate_scores_tie_break(policy):
+    """Cold-start states make every estimate/score an exact duplicate (the
+    BIG exploration sentinel), and repeated observations create duplicate
+    finite scores; the compacted argmax must break every tie toward the
+    lowest client index, like numpy's Algorithm 1 over sorted candidates."""
+    k, s_round = 12, 4
+    cands = np.array([1, 3, 4, 7, 8, 10])
+    mask = np.zeros((1, k), bool)
+    mask[0, cands] = True
+    # identical observations for every client => duplicate finite scores
+    # after the first round; round 0 is the all-BIG cold-start tie
+    t_ud = np.full((3, k), 5.0, np.float32)
+    t_ul = np.full((3, k), 7.0, np.float32)
+    masks = np.repeat(mask, 3, axis=0)
+
+    sels, _, _ = _fused_loop(policy, masks, t_ud, t_ul, s_round,
+                             n_cand=len(cands))
+
+    pol = make_policy(policy, k, s_round)
+    from repro.core.bandit import ClientStats
+    st_np = ClientStats.create(k)
+    rng = np.random.default_rng(0)
+    for r in range(3):
+        want = pol.select(st_np, cands, rng, true_times=(t_ud[r], t_ul[r]))
+        got = [int(x) for x in sels[r] if int(x) >= 0]
+        assert got == want, f"round {r}: {got} != {want}"
+        t, t_d = 0.0, 0.0
+        from repro.core.bandit import t_inc
+        for c in want:
+            inc = t_inc(t, t_d, float(t_ud[r][c]), float(t_ul[r][c]))
+            t, t_d = max(t + inc, 0.0), max(t_d, float(t_ul[r][c]))
+            st_np.observe(c, float(t_ud[r][c]), float(t_ul[r][c]), inc)
+        if hasattr(pol, "observe_round"):
+            pol.observe_round(want, t_ud[r], t_ul[r])
+
+
+@pytest.mark.parametrize("policy", ["elementwise_ucb", "naive_ucb",
+                                    "random"])
+def test_degenerate_small_candidate_set(policy):
+    """S >= |candidates|: the fused round selects every candidate and pads
+    with -1, exactly like the fallback."""
+    k, s_round = 30, 5
+    cands = np.array([4, 17, 23])
+    mask = np.zeros((4, k), bool)
+    mask[:, cands] = True
+    rng = np.random.default_rng(1)
+    t_ud = rng.uniform(1, 50, (4, k)).astype(np.float32)
+    t_ul = rng.uniform(1, 50, (4, k)).astype(np.float32)
+
+    b_sel, b_rt, b_st, f_sel, f_rt, f_st = _degenerate_paths(
+        policy, mask, t_ud, t_ul, s_round, n_cand=s_round)
+    np.testing.assert_array_equal(f_sel, b_sel)
+    np.testing.assert_array_equal(f_rt, b_rt)
+    assert np.all(np.sort(f_sel[0])[:2] == -1)          # padded slots
+    assert set(f_sel[0][f_sel[0] >= 0]) == set(cands.tolist())
+
+
+def _degenerate_paths(policy, masks, t_ud, t_ul, s_round, n_cand):
+    """Run both paths on explicit masks (n_cand > |candidates|, so the
+    fused candidate list itself carries padding)."""
+    k = t_ud.shape[1]
+    keys = jax.random.split(jax.random.PRNGKey(5), masks.shape[0])
+    select_fn = bandit_jax.make_select_fn(policy, s_round)
+    decay = bandit_jax.policy_decay(policy)
+    round_fn = bandit_jax.make_round_fn(policy, s_round)
+    hyper = jnp.float32(bandit_jax.DEFAULT_HYPERS[policy])
+    st_b = st_f = bandit_jax.BanditState.create(k)
+    b_sel, b_rt, f_sel, f_rt = [], [], [], []
+    for r in range(masks.shape[0]):
+        st_b, rt, sel = engine_jax._round(
+            st_b, jnp.asarray(masks[r]), jnp.asarray(t_ud[r]),
+            jnp.asarray(t_ul[r]), select_fn, hyper, keys[r], decay=decay)
+        b_sel.append(np.asarray(sel)), b_rt.append(float(rt))
+        cand = bandit_jax.cand_idx_from_mask(jnp.asarray(masks[r]), n_cand)
+        st_f, sel, rt = round_fn(st_f, cand, keys[r], jnp.asarray(t_ud[r]),
+                                 jnp.asarray(t_ul[r]), hyper)
+        f_sel.append(np.asarray(sel)), f_rt.append(float(rt))
+    return (np.stack(b_sel), np.asarray(b_rt), st_b,
+            np.stack(f_sel), np.asarray(f_rt), st_f)
+
+
+# ---------------------------------------------------------------------------
+# 3. Pallas kernel (interpret mode) vs the jnp reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", bandit_jax.POLICY_NAMES)
+def test_kernel_interpret_matches_ref(policy):
+    k, s_round, n_cand, rounds = 70, 4, 20, 6
+    key = jax.random.PRNGKey(2)
+    kc, kt, kg, kp = jax.random.split(key, 4)
+    cand_keys = jax.random.split(kc, rounds)
+    cand = engine_jax._cand_sorted_from_keys(cand_keys, k, n_cand)
+    t_ud = jax.random.uniform(kt, (rounds, k), jnp.float32, 1.0, 100.0)
+    t_ul = jax.random.uniform(kg, (rounds, k), jnp.float32, 1.0, 100.0)
+    keys = jax.random.split(kp, rounds)
+
+    hyper = jnp.float32(bandit_jax.DEFAULT_HYPERS[policy])
+    # jit both sides: the engines always run jitted, and eager-vs-jit
+    # differs by 1 ulp on fused multiply-adds (e.g. disc_total * gamma + n),
+    # which is execution-context noise, not a kernel/ref divergence
+    ref_fn = jax.jit(bandit_jax.make_round_fn(policy, s_round,
+                                              use_kernel=False))
+    ker_fn = jax.jit(bandit_jax.make_round_fn(policy, s_round,
+                                              use_kernel=True,
+                                              interpret=True))
+    sr = sk = bandit_jax.BanditState.create(k)
+    for r in range(rounds):
+        sr, sel_r, rt_r = ref_fn(sr, cand[r], keys[r], t_ud[r], t_ul[r],
+                                 hyper)
+        sk, sel_k, rt_k = ker_fn(sk, cand[r], keys[r], t_ud[r], t_ul[r],
+                                 hyper)
+        np.testing.assert_array_equal(np.asarray(sel_r), np.asarray(sel_k))
+        assert float(rt_r) == float(rt_k)
+    for f in dataclasses.fields(sr):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(sr, f.name)), np.asarray(getattr(sk, f.name)),
+            err_msg=f"kernel state.{f.name} != ref ({policy})")
+
+
+# ---------------------------------------------------------------------------
+# engine-level spot checks (chunked fused == unfused; both engines)
+# ---------------------------------------------------------------------------
+
+def test_sweep_fused_default_matches_unfused():
+    kw = dict(n_rounds=10, n_clients=32, seeds=2, etas=(1.0, 1.9),
+              frac_request=0.25)
+    a = engine_jax.sweep(**kw)                           # fused default
+    b = engine_jax.sweep(**kw, fused=False)
+    c = engine_jax.sweep(**kw, chunk_rounds=5)           # fused + chunked
+    np.testing.assert_array_equal(a.round_times, b.round_times)
+    np.testing.assert_array_equal(a.round_times, c.round_times)
+
+
+def test_fl_sweep_fused_matches_unfused():
+    from repro.fl import engine
+    from repro.models import cnn
+    cfg = cnn.CnnConfig(image_size=8, channels=(8,), pool_after=(0,),
+                        fc_units=(16,), batchnorm=False)
+    task = engine.make_cnn_task("paper-baseline", 12, cfg=cfg, n_train=300,
+                                n_test=100, eval_batch=100, max_samples=20,
+                                batch_size=10)
+    kw = dict(task=task, policies=("elementwise_ucb", "random"), seeds=2,
+              n_rounds=3, cfg=cfg, s_round=3, frac_request=0.5, epochs=1,
+              batch_size=10)
+    a = engine.accuracy_sweep(**kw)
+    b = engine.accuracy_sweep(**kw, fused=False)
+    np.testing.assert_array_equal(a.selected, b.selected)
+    np.testing.assert_array_equal(a.round_times, b.round_times)
+    np.testing.assert_array_equal(a.accuracy, b.accuracy)

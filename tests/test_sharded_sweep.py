@@ -115,6 +115,21 @@ def test_multidevice_sim_sharding_matches_single_device():
 
 
 @needs_devices
+def test_multidevice_fused_round_matches_unfused_single_device():
+    """The fused round (the default path the other tests exercise) against
+    the *unfused* single-device baseline across both shard modes: the
+    fused/unfused equivalence must survive shard_map and GSPMD, not just
+    the single-device scan (tests/test_bandit_round.py)."""
+    n = jax.device_count()
+    ref = engine_jax.sweep(**SIM_KW, fused=False)
+    for extra in (dict(devices=n, shard="grid"),
+                  dict(devices=n, shard="clients", chunk_rounds=3)):
+        got = engine_jax.sweep(**SIM_KW, **extra)      # fused default
+        np.testing.assert_allclose(got.round_times, ref.round_times,
+                                   rtol=1e-4, err_msg=str(extra))
+
+
+@needs_devices
 def test_multidevice_sim_sharding_churn():
     n = jax.device_count()
     heavy = Scenario("churn-heavy", churn_prob=0.5)
