@@ -1,0 +1,173 @@
+"""End-to-end ``sweep()`` benchmark + the fast-sampling parity gates.
+
+PR 4 fused the round path but end-to-end ``sweep()`` moved only ~1.05x at
+K=10^4: the per-round full-K ``jax.random.permutation`` candidate draw and
+the [R, K] truncated-normal presample dominated wall-clock.  This bench
+measures what the streamed candidate-sliced sampling path
+(``fast_sampling=True``; the ``None`` default auto-selects it at
+K >= engine_jax.FAST_SAMPLING_MIN_K) buys END TO END — the whole
+``sweep()`` call, all 8 policies, compile excluded — against the legacy
+presample path (``fast_sampling=False``, PR 4's configuration):
+
+  * headline: K=10^4 (2048 with ``--fast``), chunked, 1 seed x 1 eta;
+  * paper scale: K=100 (informational — sampling never dominated there);
+  * per-stage context: candidate draw (permutation vs top-k-of-uniforms)
+    and Eq. (8) presample (full-[K] vs [C]-sliced) micro rows.
+
+It doubles as the CI gate for the subsystem: the run FAILS if
+
+  * fast fused/unfused or chunked/unchunked lose bitwise equality,
+  * the legacy path (fast_sampling=False) loses its own bitwise
+    fused/unfused + chunked/unchunked equalities (replay-parity guard), or
+  * (full runs only) the headline e2e speedup drops below 2x — the
+    recorded floor; the measured number (BENCH_e2e_sweep.json at the repo
+    root) is ~6-8x on this container's CPU.
+
+  PYTHONPATH=src python benchmarks/bench_e2e_sweep.py [--fast]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _timed_sweep(repeats: int = 2, **kw) -> float:
+    from repro.sim import engine_jax
+    engine_jax.sweep(**kw)                       # compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.time()
+        engine_jax.sweep(**kw)
+        best = min(best, time.time() - t0)
+    return best
+
+
+def bench_e2e(k: int, rounds: int, chunk: int | None) -> dict:
+    """Whole-sweep wall clock, fast vs legacy sampling (all 8 policies)."""
+    kw = dict(n_rounds=rounds, n_clients=k, seeds=1, etas=(1.5,),
+              chunk_rounds=chunk)
+    t_fast = _timed_sweep(**kw, fast_sampling=True)
+    t_legacy = _timed_sweep(**kw, fast_sampling=False)
+    return {"k": k, "rounds": rounds, "chunk_rounds": chunk,
+            "fast_s": round(t_fast, 3), "legacy_s": round(t_legacy, 3),
+            "speedup": round(t_legacy / max(t_fast, 1e-9), 3)}
+
+
+def bench_stages(k: int, rounds: int) -> dict:
+    """The two sampling stages the fast path replaces, in isolation."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.sim import engine_jax
+
+    n_req = max(5, k // 10)
+    keys = jax.random.split(jax.random.PRNGKey(0), rounds)
+
+    def timed(fn, *args):
+        jax.block_until_ready(fn(*args))
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.time()
+            jax.block_until_ready(fn(*args))
+            best = min(best, time.time() - t0)
+        return best
+
+    perm = jax.jit(lambda ks: engine_jax._cand_sorted_from_keys(ks, k,
+                                                                n_req))
+    topk = jax.jit(lambda ks: engine_jax._cand_topk_from_keys(ks, k, n_req))
+
+    mu_t = jnp.full((rounds, k), 1e6, jnp.float32)
+    mu_g = jnp.full((k,), 50.0, jnp.float32)
+    n_s = jnp.full((k,), 500.0, jnp.float32)
+    cand = jnp.arange(n_req, dtype=jnp.int32)
+    full = jax.jit(lambda kt, kg: engine_jax.sample_times_rounds(
+        n_s, mu_t, jnp.broadcast_to(mu_g, (rounds, k)), 1.5, 1.46e8, kt,
+        kg))
+    sliced = jax.jit(jax.vmap(lambda kk: engine_jax.sample_times_candidates(
+        kk, cand, n_s, mu_t[0], mu_g, 1.5, 1.46e8)))
+
+    kt = jax.random.split(jax.random.PRNGKey(1), rounds)
+    kg = jax.random.split(jax.random.PRNGKey(2), rounds)
+    return {
+        "cand_perm_s": round(timed(perm, keys), 4),
+        "cand_topk_s": round(timed(topk, keys), 4),
+        "presample_full_s": round(timed(full, kt, kg), 4),
+        "presample_sliced_s": round(timed(sliced, kt), 4),
+    }
+
+
+def check_parity(k: int = 32) -> list[str]:
+    """Bitwise gates on BOTH sampling paths (small K, all 8 policies)."""
+    import numpy as np
+
+    from repro.sim import engine_jax
+
+    kw = dict(n_rounds=10, n_clients=k, seeds=2, etas=(1.0, 1.9),
+              frac_request=0.25)
+    failures = []
+    for fast in (True, False):
+        tag = "fast" if fast else "legacy"
+        a = engine_jax.sweep(**kw, fast_sampling=fast)
+        b = engine_jax.sweep(**kw, fast_sampling=fast, fused=False)
+        c = engine_jax.sweep(**kw, fast_sampling=fast, chunk_rounds=5)
+        if not np.array_equal(a.round_times, b.round_times):
+            failures.append(f"{tag}: fused != unfused")
+        if not np.array_equal(a.round_times, c.round_times):
+            failures.append(f"{tag}: chunked != unchunked")
+    return failures
+
+
+def main(fast: bool = False) -> list[str]:
+    k_head = 2048 if fast else 10_000
+    rounds = 100 if fast else 200
+    out = ["name,us_per_call,derived"]
+
+    failures = check_parity()
+    results: dict = {"parity_failures": failures, "headline_k": k_head}
+    out.append("e2e_sweep/parity,,"
+               f"{'OK (bitwise, both paths)' if not failures else failures}")
+
+    from repro.sim.engine_jax import FAST_SAMPLING_MIN_K
+
+    results["e2e"] = {}
+    results["fast_sampling_min_k"] = FAST_SAMPLING_MIN_K
+    for k, chunk in ((100, None), (k_head, 50)):
+        e = bench_e2e(k, rounds, chunk)
+        results["e2e"][str(k)] = e
+        note = ("whole sweep, 8 policies" if k >= FAST_SAMPLING_MIN_K else
+                "forced fast; the None default auto-routes this K to legacy")
+        out.append(f"e2e_sweep/K{k},{1e6 * e['fast_s'] / rounds:.0f},"
+                   f"fast={e['fast_s']}s legacy={e['legacy_s']}s "
+                   f"x{e['speedup']:.2f} ({note})")
+
+    results["stages"] = bench_stages(k_head, rounds)
+    s = results["stages"]
+    out.append(f"e2e_sweep/stages_K{k_head},,"
+               f"cand perm={s['cand_perm_s']}s vs topk={s['cand_topk_s']}s; "
+               f"presample full={s['presample_full_s']}s vs "
+               f"sliced={s['presample_sliced_s']}s ({rounds} rounds)")
+
+    (ROOT / "BENCH_e2e_sweep.json").write_text(
+        json.dumps(results, indent=2, sort_keys=True) + "\n")
+    if failures:
+        raise AssertionError("fast-sampling parity gate failed: "
+                             + "; ".join(failures))
+    # acceptance floor: >= 2x e2e at the K=10^4 headline (measured ~6-8x).
+    # Only enforced at full scale — --fast runs a smaller K on noisy CI
+    # boxes where the parity gates are the signal.
+    headline = results["e2e"][str(k_head)]["speedup"]
+    if not fast:
+        assert headline >= 2.0, (
+            f"fast-sampling e2e speedup x{headline:.2f} at K={k_head} fell "
+            "below the recorded 2x floor")
+    return out
+
+
+if __name__ == "__main__":
+    for line in main(fast="--fast" in sys.argv):
+        print(line)

@@ -8,6 +8,9 @@ benches.  Prints ``name,us_per_call,derived`` CSV lines.
   round_kernel — fused bandit-round hot path vs the unfused baseline,
             bitwise parity gate incl. the Pallas kernel in interpret mode
             (BENCH_round_kernel.json)
+  e2e_sweep — whole sweep() wall clock, streamed candidate-sliced sampling
+            vs the legacy presample, with bitwise parity gates on both
+            paths (BENCH_e2e_sweep.json)
   roofline— per (arch x shape) roofline terms from the dry-run artifacts
   scale   — selection-at-scale: vectorized UCB scoring for 1e6 arms
   fl_engine — learning-coupled engine vs the classic host training loop
@@ -46,7 +49,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_accuracy, bench_convergence, bench_drift,
-                            bench_fl_engine, bench_kernels,
+                            bench_e2e_sweep, bench_fl_engine, bench_kernels,
                             bench_roofline, bench_round_kernel, bench_scale,
                             bench_selection, bench_sharded_sweep,
                             bench_sweep)
@@ -57,6 +60,7 @@ def main() -> None:
         "drift": bench_drift.main,
         "kernels": bench_kernels.main,
         "round_kernel": bench_round_kernel.main,
+        "e2e_sweep": bench_e2e_sweep.main,
         "roofline": bench_roofline.main,
         "scale": bench_scale.main,
         "sweep": bench_sweep.main,

@@ -288,12 +288,22 @@ def schedule_selected(sel: jnp.ndarray, t_ud: jnp.ndarray,
     bandit.true_round_time; incs is the per-client Eq. (1) accumulation the
     server records as the T_inc observation.  Shared by both engines
     (sim/engine_jax re-exports it as ``_schedule``) and by the fused round
-    reference (kernels/ref.py).
+    reference (kernels/ref.py).  ``t_ud``/``t_ul`` are full-[K] arrays;
+    :func:`schedule_gathered` is the core on already-gathered per-slot
+    times (the candidate-sliced fast path, which never holds [K] times).
     """
     valid = sel >= 0
     safe = jnp.where(valid, sel, 0)
-    ud = jnp.where(valid, t_ud[safe], 0.0)
-    ul = jnp.where(valid, t_ul[safe], 0.0)
+    return schedule_gathered(valid, t_ud[safe], t_ul[safe])
+
+
+def schedule_gathered(valid: jnp.ndarray, ud: jnp.ndarray,
+                      ul: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The realized-schedule arithmetic of :func:`schedule_selected` on
+    per-slot gathered times (``ud``/``ul``: [S], entries at ``~valid``
+    slots are ignored).  Returns (round_time, incs[S])."""
+    ud = jnp.where(valid, ud, 0.0)
+    ul = jnp.where(valid, ul, 0.0)
 
     t_d = jnp.max(jnp.where(valid, ul, 0.0))
     def tbody(t, x):
@@ -396,18 +406,29 @@ def policy_scores(policy: str, obs: dict, total, disc_total, t_ud, t_ul,
     raise ValueError(f"unknown policy {policy!r}; have {list(POLICY_STATS)}")
 
 
-def _select_via_scores(policy, state, cand_mask, key, true_ud, true_ul,
-                       hyper, s_round: int) -> jnp.ndarray:
-    """Static-fallback selection: full-[K] :func:`policy_scores` into the
-    masked greedy / top-S primitives."""
-    rand = (jax.random.uniform(key, cand_mask.shape)
-            if policy == "random" else None)
+def _select_with_rand(policy, state, cand_mask, true_ud, true_ul, rand,
+                      hyper, s_round: int) -> jnp.ndarray:
+    """Mask-based selection from an externally drawn ``rand`` stream:
+    full-[K] :func:`policy_scores` into the masked greedy / top-S
+    primitives.  Shared by the select fns below (which draw ``rand`` from
+    their key) and the small-K fused-round fallback
+    (:func:`round_via_mask`, whose caller already drew it)."""
     kind, a, b = policy_scores(policy, state_obs(state), state.total,
                                state.disc_total, true_ud, true_ul, rand,
                                hyper)
     if kind == "score":
         return _top_score(a, cand_mask, s_round)
     return _greedy_tinc(a, b, cand_mask, s_round)
+
+
+def _select_via_scores(policy, state, cand_mask, key, true_ud, true_ul,
+                       hyper, s_round: int) -> jnp.ndarray:
+    """Static-fallback selection: draw the uniform stream (random policy
+    only) and run :func:`_select_with_rand`."""
+    rand = (jax.random.uniform(key, cand_mask.shape)
+            if policy == "random" else None)
+    return _select_with_rand(policy, state, cand_mask, true_ud, true_ul,
+                             rand, hyper, s_round)
 
 
 def select_fedcs_mask(state, cand_mask, key, true_ud, true_ul, hyper,
@@ -521,6 +542,60 @@ def policy_decay(policy: str) -> float:
     return DEFAULT_GAMMA if policy == "discounted_ucb" else 1.0
 
 
+# Below this many arms the fused round's candidate compaction costs more
+# than it saves for these policies (measured on CPU, BENCH_round_kernel.json
+# K=100 rows: random 0.77x, discounted_ucb 0.89x, naive_ucb 0.96x before
+# routing) — ops.bandit_round auto-falls back to the unfused mask path
+# (:func:`round_via_mask`, bitwise-identical results) when ``use_kernel``
+# is unset.  Policies not listed always fuse (their compaction wins at
+# every measured K).
+FUSED_MIN_K: dict[str, int] = {
+    "random": 1024,
+    "naive_ucb": 1024,
+    "discounted_ucb": 512,
+}
+
+
+def fused_min_k(policy: str) -> int:
+    """Smallest K at which ``ops.bandit_round`` keeps the fused compacted
+    path for ``policy`` under auto-routing (0 = always fused)."""
+    return FUSED_MIN_K.get(policy, 0)
+
+
+def scatter_cand_times(cand_idx: jnp.ndarray, t_ud_c: jnp.ndarray,
+                       t_ul_c: jnp.ndarray, k: int):
+    """Spread candidate-sliced times into zero-[K] buffers plus the [K]
+    candidate mask — the bridge from the streamed-sampling draws to the
+    unfused mask pipeline (``cand_idx`` entries >= K are padding and drop).
+    The ONE copy all three fast-path unfused consumers share, so the
+    cross-path bitwise-parity gates guard a single definition."""
+    drop = jnp.where(cand_idx < k, cand_idx, k)
+    t_ud = jnp.zeros(k, jnp.float32).at[drop].set(t_ud_c, mode="drop")
+    t_ul = jnp.zeros(k, jnp.float32).at[drop].set(t_ul_c, mode="drop")
+    mask = jnp.zeros(k, bool).at[cand_idx].set(True, mode="drop")
+    return t_ud, t_ul, mask
+
+
+def round_via_mask(state, cand_mask, t_ud, t_ul, rand, hyper, *,
+                   policy: str, s_round: int, decay: float = 1.0):
+    """One whole round through the UNfused mask pipeline (full-[K] select +
+    schedule + observe) with the round contract of the fused paths:
+    returns ``(new_state, sel [S], round_time)``.
+
+    This is the small-K fallback of ops.bandit_round (see
+    :data:`FUSED_MIN_K`): ``rand`` is the [K] uniform stream the fused
+    caller already drew (random policy; None otherwise), so routing here
+    consumes the identical randomness and stays bitwise-equal to both the
+    fused paths and the engines' ``fused=False`` baseline.
+    """
+    sel = _select_with_rand(policy, state, cand_mask, t_ud, t_ul, rand,
+                            hyper, s_round)
+    round_time, incs = schedule_selected(sel, t_ud, t_ul)
+    safe = jnp.where(sel >= 0, sel, 0)
+    state = observe(state, sel, t_ud[safe], t_ul[safe], incs, decay=decay)
+    return state, sel, round_time
+
+
 def make_select_fn(policy: str, s_round: int) -> Callable:
     """Resolve a policy name into its mask-based select_fn with the cohort
     size bound — the common entry point of both on-device engines
@@ -548,6 +623,11 @@ def make_round_fn(policy: str, s_round: int, *,
     [C]-compacted candidate slice instead of S passes over all K arms, and
     on TPU the whole round is one Pallas kernel (kernels/bandit_round.py;
     ``use_kernel``/``interpret`` override the kernels/ops auto-routing).
+    With ``use_kernel`` unset and K below the policy's
+    :data:`FUSED_MIN_K` threshold, the round auto-falls back to the
+    unfused mask pipeline (:func:`round_via_mask`) — same results,
+    bitwise; the engines additionally skip the index encoding entirely
+    below the threshold so the fallback costs nothing.
     The per-round decay of the ``disc_*`` statistics is resolved statically
     from the policy, exactly as the engines do for the fallback.
     """
@@ -557,13 +637,76 @@ def make_round_fn(policy: str, s_round: int, *,
 
     def round_fn(state, cand_idx, key, t_ud, t_ul, hyper):
         from repro.kernels import ops
+        k = t_ud.shape[0]
         # same [K] uniform draw (same key) as select_random_mask, so the
         # fused and fallback paths consume identical randomness
         rand = (jax.random.uniform(key, t_ud.shape)
                 if policy == "random" else None)
+        if use_kernel is None and k < fused_min_k(policy):
+            mask = jnp.zeros(k, bool).at[cand_idx].set(True, mode="drop")
+            return round_via_mask(state, mask, t_ud, t_ul, rand, hyper,
+                                  policy=policy, s_round=s_round,
+                                  decay=decay)
         return ops.bandit_round(state, cand_idx, t_ud, t_ul, rand, hyper,
                                 policy=policy, s_round=s_round, decay=decay,
                                 use_kernel=use_kernel, interpret=interpret)
+
+    return round_fn
+
+
+def make_sampled_round_fn(policy: str, s_round: int, *,
+                          fluctuate: bool = True,
+                          use_kernel: bool | None = None,
+                          interpret: bool | None = None) -> Callable:
+    """The streamed-sampling fast path: one whole protocol round that draws
+    its own Eq. (8) resource times AT THE CANDIDATE SLICE —
+
+        round_fn(state, cand_idx, key, k_time, theta_mu, gamma_mu,
+                 n_samples, eta, model_bits, hyper)
+            -> (new_state, sel [S], round_time)
+
+    ``theta_mu``/``gamma_mu``/``n_samples``: full-[K] per-client means
+    (``theta_mu`` already carries any scenario multiplier); ``k_time`` is
+    this round's time-draw PRNG key.  The round never materializes [K]
+    resource draws: it draws ONE [2, C] uniform block from ``k_time``
+    (bitwise the stream of sim.engine_jax.sample_times_candidates with the
+    same key) and the transform to (t_UD, t_UL) runs inside the fused
+    round — in-VMEM in the Pallas kernel on TPU, on the [C] slice in the
+    jnp reference elsewhere (kernels/ops.bandit_round_sampled routes).
+
+    The random policy still draws its [K] uniform stream from ``key`` so
+    the fast path's fused and unfused executions stay bitwise-identical,
+    like ``make_round_fn``'s.
+    """
+    if policy not in SELECT_FNS:
+        raise ValueError(f"unknown policy {policy!r}; have {POLICY_NAMES}")
+    decay = policy_decay(policy)
+
+    def round_fn(state, cand_idx, key, k_time, theta_mu, gamma_mu,
+                 n_samples, eta, model_bits, hyper):
+        from repro.kernels import ops
+        from repro.kernels.ref import truncnorm_times_ref
+        k = theta_mu.shape[0]
+        rand = (jax.random.uniform(key, theta_mu.shape)
+                if policy == "random" else None)
+        u2 = (jax.random.uniform(k_time, (2,) + cand_idx.shape, jnp.float32)
+              if fluctuate else None)
+        if use_kernel is None and k < fused_min_k(policy):
+            # small-K fallback (FUSED_MIN_K): same sliced draws, scattered
+            # into zero-[K] buffers for the unfused mask pipeline
+            safe_c = jnp.where(cand_idx < k, cand_idx, 0)
+            t_ud_c, t_ul_c = truncnorm_times_ref(
+                u2, theta_mu[safe_c], gamma_mu[safe_c], n_samples[safe_c],
+                eta, model_bits, fluctuate=fluctuate)
+            t_ud, t_ul, mask = scatter_cand_times(cand_idx, t_ud_c, t_ul_c,
+                                                  k)
+            return round_via_mask(state, mask, t_ud, t_ul, rand, hyper,
+                                  policy=policy, s_round=s_round,
+                                  decay=decay)
+        return ops.bandit_round_sampled(
+            state, cand_idx, u2, rand, theta_mu, gamma_mu, n_samples, eta,
+            model_bits, hyper, policy=policy, s_round=s_round, decay=decay,
+            fluctuate=fluctuate, use_kernel=use_kernel, interpret=interpret)
 
     return round_fn
 

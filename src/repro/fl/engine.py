@@ -342,6 +342,11 @@ def _presample(env: engine_jax.EnvArrays, scen: Scenario, seed, *,
     host loop consumes these arrays, making host and engine runs
     common-random-number twins.
 
+    This is the LEGACY (``fast_sampling=False``) stream — full-[R, K]
+    candidate masks and time draws; replay parity lives here.  The
+    streamed candidate-sliced default never materializes these arrays
+    (see ``_scan_rounds_chunked``).
+
     All draws derive from per-round keys (one split per round off each
     root, same split order as ``_scan_rounds_chunked``), so the chunked
     scan regenerates the *identical* stream from the keys alone.
@@ -415,6 +420,61 @@ def _make_protocol_round(task: FlTask, hyper, *, policy: str, s_round: int,
     return protocol_round
 
 
+def _make_sampled_protocol_round(task: FlTask, hyper, *, policy: str,
+                                 s_round: int, epochs: int, batch_size: int,
+                                 cohort: str, use_kernel: bool,
+                                 cfg: cnn.CnnConfig, fluctuate: bool,
+                                 eta, model_bits, fused: bool = True,
+                                 native_perm: bool = False):
+    """The streamed-sampling twin of ``_make_protocol_round``: the round
+    draws its own Eq. (8) times at the [C] candidate slice instead of
+    consuming presampled [K] arrays.
+
+    Returns ``protocol_round(params, bstate, cand, mu_theta, mu_gamma,
+    k_time, k_pol, k_perm, lr) -> (params, bstate, round_time, accuracy,
+    sel)``; ``cand``: [C] sorted candidate indices, ``mu_theta``/
+    ``mu_gamma``: the round's effective per-client means.  ``fused``
+    routes through ``make_sampled_round_fn`` (in-kernel sampling on TPU);
+    the unfused twin samples the same [C] slice with the same key and
+    scatters it into zero-[K] buffers for the mask pipeline — bitwise the
+    same selections, times and state.
+    """
+    client_update = make_client_update(
+        functools.partial(cnn.loss_fn, cfg=cfg),
+        epochs=epochs, batch_size=batch_size, native_perm=native_perm)
+    evaluate = make_evaluator(functools.partial(cnn.apply, cfg=cfg))
+    k = task.part_count.shape[0]
+    if fused:
+        round_fn = bandit_jax.make_sampled_round_fn(policy, s_round,
+                                                    fluctuate=fluctuate)
+    else:
+        select_fn = bandit_jax.make_select_fn(policy, s_round)
+        decay = bandit_jax.policy_decay(policy)
+
+    def protocol_round(params, bstate, cand, mu_theta, mu_gamma, k_time,
+                       k_pol, k_perm, lr):
+        if fused:
+            bstate, sel, round_time = round_fn(
+                bstate, cand, k_pol, k_time, mu_theta, mu_gamma,
+                task.env.n_samples, eta, model_bits, hyper)
+        else:
+            t_ud_c, t_ul_c = engine_jax.sample_times_candidates(
+                k_time, cand, task.env.n_samples, mu_theta, mu_gamma, eta,
+                model_bits, fluctuate=fluctuate)
+            t_ud, t_ul, mask = bandit_jax.scatter_cand_times(cand, t_ud_c,
+                                                             t_ul_c, k)
+            bstate, round_time, sel = engine_jax._round(
+                bstate, mask, t_ud, t_ul, select_fn, hyper, k_pol,
+                decay=decay)
+        params = _train_round(params, sel, task, lr, k_perm,
+                              client_update=client_update, cohort=cohort,
+                              use_kernel=use_kernel)
+        acc = evaluate(params, task.test_x, task.test_y, task.test_mask)
+        return params, bstate, round_time, acc, sel
+
+    return protocol_round
+
+
 def _scan_rounds(task: FlTask, hyper, pre: dict, *, policy: str,
                  s_round: int, epochs: int, batch_size: int, cohort: str,
                  use_kernel: bool, cfg: cnn.CnnConfig,
@@ -455,7 +515,8 @@ def _scan_rounds_chunked(task: FlTask, hyper, seed, *, policy: str,
                          fluctuate: bool, epochs: int, batch_size: int,
                          cohort: str, use_kernel: bool, cfg: cnn.CnnConfig,
                          client_mesh=None, fused: bool = True,
-                         native_perm: bool = False):
+                         native_perm: bool = False,
+                         fast_sampling: bool = True):
     """The chunked twin of ``_presample`` + ``_scan_rounds``: an outer scan
     over R/c chunks regenerates each chunk's candidates/multipliers/draws
     from the same per-round keys ``_presample`` would use, so peak memory
@@ -464,8 +525,19 @@ def _scan_rounds_chunked(task: FlTask, hyper, seed, *, policy: str,
     path.  ``client_mesh`` pins the [K] axes to a device mesh (large-K
     layout); ``fused`` (default) routes select/schedule/observe through
     the one-pass fused round — same candidate keys, sorted-index encoding,
-    bitwise-identical selections."""
+    bitwise-identical selections.
+
+    ``fast_sampling`` (default) is the streamed candidate-sliced path:
+    top-k-of-uniforms candidate draws and Eq. (8) times sampled only at
+    the [C] polled slice inside the round (``_make_sampled_protocol_round``)
+    — a different (equally distributed) stream from the legacy presample.
+    ``fast_sampling=False`` preserves the legacy stream exactly; the
+    replay/host-reference twins (``_presample``/``_scan_rounds``) live on
+    that path only."""
     k = task.part_count.shape[0]
+    # below FUSED_MIN_K the unfused mask pipeline wins (see engine_jax);
+    # results are bitwise-identical either way
+    fused = fused and k >= bandit_jax.fused_min_k(policy)
     c = int(chunk_rounds)
     if n_rounds % c:
         raise ValueError(f"n_rounds={n_rounds} not divisible by "
@@ -478,12 +550,52 @@ def _scan_rounds_chunked(task: FlTask, hyper, seed, *, policy: str,
     rounds = jnp.arange(1, n_rounds + 1, dtype=jnp.int32).reshape(
         n_chunks, c)
     lrs = _round_lrs(n_rounds).reshape(n_chunks, c)
+    state0 = engine_jax._client_constrain(bandit_jax.BanditState.create(k),
+                                          client_mesh)
+
+    if fast_sampling:
+        protocol_round = _make_sampled_protocol_round(
+            task, hyper, policy=policy, s_round=s_round, epochs=epochs,
+            batch_size=batch_size, cohort=cohort, use_kernel=use_kernel,
+            cfg=cfg, fluctuate=fluctuate, eta=eta, model_bits=model_bits,
+            fused=fused, native_perm=native_perm)
+
+        def fast_chunk_body(carry, xs):
+            params, bstate, m_theta, m_gamma = carry
+            kk, rr, lr_c = xs
+            cands = engine_jax._cand_topk_from_keys(kk["cand"], k, n_req)
+            thr_mult = engine_jax.scenario_thr_mult(scen, task.env.cell_id,
+                                                    kk["cong"], rr)
+
+            def step(carry2, x):
+                params, bstate, m_th, m_ga = carry2
+                cand, mult, k_t, k_pol, k_perm, k_c, lr = x
+                mu_t = engine_jax._client_constrain(m_th * mult, client_mesh)
+                params, bstate, rt, acc, sel = protocol_round(
+                    params, bstate, cand, mu_t, m_ga, k_t, k_pol, k_perm,
+                    lr)
+                if scen.churn_prob > 0.0:
+                    m_th, m_ga = engine_jax.churn_step(k_c, m_th, m_ga,
+                                                       scen.churn_prob)
+                return (params, bstate, m_th, m_ga), (rt, acc, sel)
+
+            carry2, ys = jax.lax.scan(
+                step, (params, bstate, m_theta, m_gamma),
+                (cands, thr_mult, kk["theta"], kk["pol"], kk["perm"],
+                 kk["churn"], lr_c))
+            return carry2, ys
+
+        carry0 = (task.params0, state0, task.env.mean_theta,
+                  task.env.mean_gamma)
+        _, (rts, accs, sels) = jax.lax.scan(fast_chunk_body, carry0,
+                                            (keys, rounds, lrs))
+        return (rts.reshape(n_rounds), accs.reshape(n_rounds),
+                sels.reshape(n_rounds, s_round))
+
     protocol_round = _make_protocol_round(
         task, hyper, policy=policy, s_round=s_round, epochs=epochs,
         batch_size=batch_size, cohort=cohort, use_kernel=use_kernel, cfg=cfg,
         fused=fused, native_perm=native_perm)
-    state0 = engine_jax._client_constrain(bandit_jax.BanditState.create(k),
-                                          client_mesh)
 
     def chunk_body(carry, xs):
         params, bstate, m_theta, m_gamma = carry
@@ -549,18 +661,22 @@ def _run_fl_one(task: FlTask, model_bits, hyper, eta, seed, *, policy: str,
                 fluctuate: bool, epochs: int, batch_size: int, cohort: str,
                 use_kernel: bool, cfg: cnn.CnnConfig,
                 chunk_rounds: int | None = None, client_mesh=None,
-                fused: bool = True, native_perm: bool = False):
+                fused: bool = True, native_perm: bool = False,
+                fast_sampling: bool = True):
     """One (policy, seed) grid point, always through the chunked scan —
-    the default is one chunk spanning the whole run, which consumes the
-    stream ``_presample`` would draw bit-for-bit (per-round keys), so
-    ``run_host_reference`` stays a replay twin of every chunk size."""
+    the default is one chunk spanning the whole run.  With
+    ``fast_sampling=False`` that consumes the stream ``_presample`` would
+    draw bit-for-bit (per-round keys), so ``run_host_reference`` stays a
+    replay twin of every chunk size; the default streams the
+    candidate-sliced draws instead (see ``_scan_rounds_chunked``)."""
     return _scan_rounds_chunked(
         task, hyper, seed, policy=policy, scen=scen, n_rounds=n_rounds,
         chunk_rounds=n_rounds if chunk_rounds is None else chunk_rounds,
         s_round=s_round, n_req=n_req, eta=eta, model_bits=model_bits,
         fluctuate=fluctuate, epochs=epochs, batch_size=batch_size,
         cohort=cohort, use_kernel=use_kernel, cfg=cfg,
-        client_mesh=client_mesh, fused=fused, native_perm=native_perm)
+        client_mesh=client_mesh, fused=fused, native_perm=native_perm,
+        fast_sampling=fast_sampling)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -610,12 +726,13 @@ def run_replay(task: FlTask, hyper, cand_masks, t_ud, t_ul, pol_keys,
 @functools.partial(jax.jit, static_argnames=(
     "policies", "scen", "n_rounds", "s_round", "n_req", "fluctuate",
     "epochs", "batch_size", "cohort", "use_kernel", "cfg", "chunk_rounds",
-    "mesh", "shard", "fused", "native_perm"), donate_argnames=("seeds",))
+    "mesh", "shard", "fused", "native_perm", "fast_sampling"),
+    donate_argnames=("seeds",))
 def _run_grid(task: FlTask, model_bits, hypers, eta, seeds, *,
               policies: tuple[str, ...], scen: Scenario, n_rounds, s_round,
               n_req, fluctuate, epochs, batch_size, cohort, use_kernel, cfg,
               chunk_rounds=None, mesh=None, shard="grid", fused=True,
-              native_perm=False):
+              native_perm=False, fast_sampling=True):
     """One jit call for the whole accuracy sweep: the policy axis is
     unrolled statically (each entry vmaps its own selection rule over the
     seed axis); hypers: [P], seeds: [S], donated.
@@ -636,7 +753,7 @@ def _run_grid(task: FlTask, model_bits, hypers, eta, seeds, *,
             s_round=s_round, n_req=n_req, fluctuate=fluctuate, epochs=epochs,
             batch_size=batch_size, cohort=cohort, use_kernel=use_kernel,
             cfg=cfg, chunk_rounds=chunk_rounds, client_mesh=client_mesh,
-            fused=fused, native_perm=native_perm)
+            fused=fused, native_perm=native_perm, fast_sampling=fast_sampling)
         g = jax.vmap(f, in_axes=(None, None, None, None, 0))
         if mesh is not None and shard == "grid":
             g = dist_sharding.shard_vmapped(g, mesh, sharded_argnums=(4,))
@@ -714,6 +831,7 @@ def accuracy_sweep(scenario: Scenario | str = "paper-baseline",
                    shard: str = "grid",
                    chunk_rounds: int | None = None,
                    fused: bool = True,
+                   fast_sampling: bool | None = None,
                    fast_perm: bool | None = None,
                    **task_kwargs) -> FlSweepResult:
     """Run the full (policy x seed) accuracy-vs-time grid as ONE jit call.
@@ -734,7 +852,14 @@ def accuracy_sweep(scenario: Scenario | str = "paper-baseline",
     via GSPMD), ``chunk_rounds`` caps peak memory at O(chunk_rounds · K)
     per grid point without changing the consumed random stream, ``fused``
     (default) runs select/schedule/observe as the one-pass fused round
-    (bitwise-identical; ``False`` = the unfused baseline).  ``fast_perm``
+    (bitwise-identical; ``False`` = the unfused baseline).
+    ``fast_sampling`` streams the candidate-sliced sampling path —
+    top-k-of-uniforms candidate draws, Eq. (8) times sampled only at the
+    [C] polled slice inside the round; None (default) auto-selects it at
+    K >= engine_jax.FAST_SAMPLING_MIN_K, where the K-sized draws dominate;
+    ``fast_sampling=False`` preserves the legacy full-[R, K] presample
+    stream exactly, which is the stream ``run_host_reference``/
+    ``run_replay`` consume (replay parity lives there).  ``fast_perm``
     picks the client-shuffle draw: None (default) auto-selects the native
     ``jax.random.permutation`` path exactly when every shard is full
     (see ``make_client_update``); the host reference applies the same
@@ -771,6 +896,8 @@ def accuracy_sweep(scenario: Scenario | str = "paper-baseline",
 
     native_perm = (_native_perm_auto(task) if fast_perm is None
                    else bool(fast_perm))
+    fast_sampling = engine_jax.resolve_fast_sampling(fast_sampling,
+                                                     n_clients)
     with suppress_unusable_donation_warnings():
         rts, accs, sels = _run_grid(
             task, jnp.float32(model_bits), jnp.asarray(hypers, jnp.float32),
@@ -780,7 +907,7 @@ def accuracy_sweep(scenario: Scenario | str = "paper-baseline",
             fluctuate=fluctuate, epochs=epochs, batch_size=batch_size,
             cohort=cohort, use_kernel=bool(use_kernel), cfg=cfg,
             chunk_rounds=chunk_rounds, mesh=mesh, shard=shard, fused=fused,
-            native_perm=native_perm)
+            native_perm=native_perm, fast_sampling=fast_sampling)
     n_seeds = len(seeds)
     return FlSweepResult(
         policies=tuple(pol_names), hypers=tuple(hypers), seeds=seeds,

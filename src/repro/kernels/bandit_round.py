@@ -50,6 +50,67 @@ def _round_kernel(nsel_ref, sumud_ref, sumul_ref, sumtinc_ref, lastud_ref,
                   o_histud, o_histul, o_histn, o_discn, o_discud, o_discul,
                   o_total, o_disctotal, o_sel, o_rt,
                   *, policy: str, s_round: int, w: int, decay: float):
+    _round_body(
+        nsel_ref, sumud_ref, sumul_ref, sumtinc_ref, lastud_ref, lastul_ref,
+        histud_ref, histul_ref, histn_ref, discn_ref, discud_ref, discul_ref,
+        total_ref, disctotal_ref, mask_ref, tud_ref[...], tul_ref[...],
+        rand_ref, hyper_ref, o_nsel, o_sumud, o_sumul, o_sumtinc, o_lastud,
+        o_lastul, o_histud, o_histul, o_histn, o_discn, o_discud, o_discul,
+        o_total, o_disctotal, o_sel, o_rt, policy=policy, s_round=s_round,
+        w=w, decay=decay)
+
+
+def _sampled_round_kernel(nsel_ref, sumud_ref, sumul_ref, sumtinc_ref,
+                          lastud_ref, lastul_ref, histud_ref, histul_ref,
+                          histn_ref, discn_ref, discud_ref, discul_ref,
+                          total_ref, disctotal_ref, mask_ref, cand_ref,
+                          u2_ref, mutheta_ref, mugamma_ref, nsamp_ref,
+                          eta_ref, bits_ref, rand_ref, hyper_ref,
+                          o_nsel, o_sumud, o_sumul, o_sumtinc, o_lastud,
+                          o_lastul, o_histud, o_histul, o_histn, o_discn,
+                          o_discud, o_discul, o_total, o_disctotal, o_sel,
+                          o_rt, *, policy: str, s_round: int, w: int,
+                          decay: float, k: int, fluctuate: bool):
+    """The streamed-sampling variant: the Eq. (8) truncnorm transform runs
+    HERE, in VMEM, on the [C] candidate slice (``u2_ref``: [2, C] uniforms,
+    ``mutheta_ref``/``mugamma_ref``/``nsamp_ref``: [Kp] per-client means),
+    and the resulting (t_UD, t_UL) are scattered into [Kp] buffers only
+    candidates ever read — no [K] resource draw exists anywhere.  The
+    transform is kernels/ref.truncnorm_times_ref verbatim (pure jnp), so
+    kernel and reference stay bitwise-identical."""
+    from repro.kernels.ref import truncnorm_times_ref
+
+    kp = nsel_ref.shape[0]
+    cand = cand_ref[...]
+    cvalid = cand < k
+    safe_c = jnp.where(cvalid, cand, 0)
+    t_ud_c, t_ul_c = truncnorm_times_ref(
+        u2_ref[...], mutheta_ref[...][safe_c], mugamma_ref[...][safe_c],
+        nsamp_ref[...][safe_c], eta_ref[0], bits_ref[0],
+        fluctuate=fluctuate)
+    drop_c = jnp.where(cvalid, cand, kp)
+    t_ud = jnp.zeros(kp, jnp.float32).at[drop_c].set(t_ud_c, mode="drop")
+    t_ul = jnp.zeros(kp, jnp.float32).at[drop_c].set(t_ul_c, mode="drop")
+    _round_body(
+        nsel_ref, sumud_ref, sumul_ref, sumtinc_ref, lastud_ref, lastul_ref,
+        histud_ref, histul_ref, histn_ref, discn_ref, discud_ref, discul_ref,
+        total_ref, disctotal_ref, mask_ref, t_ud, t_ul, rand_ref, hyper_ref,
+        o_nsel, o_sumud, o_sumul, o_sumtinc, o_lastud, o_lastul, o_histud,
+        o_histul, o_histn, o_discn, o_discud, o_discul, o_total, o_disctotal,
+        o_sel, o_rt, policy=policy, s_round=s_round, w=w, decay=decay)
+
+
+def _round_body(nsel_ref, sumud_ref, sumul_ref, sumtinc_ref, lastud_ref,
+                lastul_ref, histud_ref, histul_ref, histn_ref, discn_ref,
+                discud_ref, discul_ref, total_ref, disctotal_ref, mask_ref,
+                t_ud, t_ul, rand_ref, hyper_ref,
+                o_nsel, o_sumud, o_sumul, o_sumtinc, o_lastud, o_lastul,
+                o_histud, o_histul, o_histn, o_discn, o_discud, o_discul,
+                o_total, o_disctotal, o_sel, o_rt,
+                *, policy: str, s_round: int, w: int, decay: float):
+    """score -> select -> schedule -> observe on VMEM-resident values;
+    ``t_ud``/``t_ul`` arrive as loaded [Kp] values (from refs in the plain
+    kernel, computed in-VMEM in the sampled one)."""
     n_sel = nsel_ref[...]
     sum_ud, sum_ul = sumud_ref[...], sumul_ref[...]
     sum_tinc = sumtinc_ref[...]
@@ -59,7 +120,7 @@ def _round_kernel(nsel_ref, sumud_ref, sumul_ref, sumtinc_ref, lastud_ref,
     disc_n, disc_ud, disc_ul = discn_ref[...], discud_ref[...], discul_ref[...]
     total, disc_total = total_ref[0], disctotal_ref[0]
     mask = mask_ref[...] != 0
-    t_ud, t_ul, rand = tud_ref[...], tul_ref[...], rand_ref[...]
+    rand = rand_ref[...]
     hyper = hyper_ref[0]
     kp = n_sel.shape[0]
 
@@ -188,6 +249,90 @@ def bandit_round_pallas(state, cand_idx, t_ud, t_ul, rand, hyper, *,
       pad1(state.disc_ul), state.total.reshape(1),
       state.disc_total.reshape(1), mask,
       pad1(t_ud.astype(jnp.float32)), pad1(t_ul.astype(jnp.float32)),
+      pad1(rand.astype(jnp.float32)),
+      jnp.asarray(hyper, jnp.float32).reshape(1))
+
+    new_state = state.replace(
+        n_sel=outs[0][:k], sum_ud=outs[1][:k], sum_ul=outs[2][:k],
+        sum_tinc=outs[3][:k], last_ud=outs[4][:k], last_ul=outs[5][:k],
+        hist_ud=outs[6][:k], hist_ul=outs[7][:k], hist_n=outs[8][:k],
+        disc_n=outs[9][:k], disc_ud=outs[10][:k], disc_ul=outs[11][:k],
+        total=outs[12][0], disc_total=outs[13][0])
+    return new_state, outs[14], outs[15][0]
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "s_round", "decay",
+                                             "fluctuate", "interpret"))
+def bandit_round_pallas_sampled(state, cand_idx, u2, rand, theta_mu,
+                                gamma_mu, n_samples, eta, model_bits, hyper,
+                                *, policy: str, s_round: int,
+                                decay: float = 1.0, fluctuate: bool = True,
+                                interpret: bool = True):
+    """Fused round that draws its own Eq. (8) times in-VMEM; same contract
+    as ops.bandit_round_sampled (``cand_idx``: [C] sorted, >= K padding;
+    ``u2``: [2, C] uniforms or None; ``theta_mu``/``gamma_mu``/
+    ``n_samples``: [K] means).  Returns (state, sel, rt)."""
+    k = theta_mu.shape[0]
+    w = state.hist_ud.shape[1]
+    c = cand_idx.shape[0]
+    pad = (-k) % BLOCK
+    kp = k + pad
+
+    def pad1(x):
+        return jnp.pad(x, (0, pad)) if pad else x
+
+    mask = jnp.zeros(kp, jnp.int32).at[
+        jnp.where(cand_idx < k, cand_idx, kp)].set(1, mode="drop")
+    u2 = jnp.zeros((2, c), jnp.float32) if u2 is None else u2
+    rand = jnp.zeros(k, jnp.float32) if rand is None else rand
+
+    spec1 = pl.BlockSpec((kp,), lambda i: (0,))
+    spec2 = pl.BlockSpec((kp, w), lambda i: (0, 0))
+    spec_s = pl.BlockSpec((1,), lambda i: (0,))
+    spec_c = pl.BlockSpec((c,), lambda i: (0,))
+    spec_u2 = pl.BlockSpec((2, c), lambda i: (0, 0))
+    spec_sel = pl.BlockSpec((s_round,), lambda i: (0,))
+
+    out_shape = (
+        jax.ShapeDtypeStruct((kp,), jnp.int32),       # n_sel
+        *(jax.ShapeDtypeStruct((kp,), jnp.float32) for _ in range(5)),
+        jax.ShapeDtypeStruct((kp, w), jnp.float32),   # hist_ud
+        jax.ShapeDtypeStruct((kp, w), jnp.float32),   # hist_ul
+        jax.ShapeDtypeStruct((kp,), jnp.int32),       # hist_n
+        *(jax.ShapeDtypeStruct((kp,), jnp.float32) for _ in range(3)),
+        jax.ShapeDtypeStruct((1,), jnp.int32),        # total
+        jax.ShapeDtypeStruct((1,), jnp.float32),      # disc_total
+        jax.ShapeDtypeStruct((s_round,), jnp.int32),  # sel
+        jax.ShapeDtypeStruct((1,), jnp.float32),      # round_time
+    )
+    out_specs = (spec1, spec1, spec1, spec1, spec1, spec1, spec2, spec2,
+                 spec1, spec1, spec1, spec1, spec_s, spec_s, spec_sel,
+                 spec_s)
+    in_specs = [spec1] * 6 + [spec2, spec2] + [spec1] * 4 + \
+        [spec_s, spec_s] + [spec1, spec_c, spec_u2] + [spec1] * 3 + \
+        [spec_s, spec_s] + [spec1, spec_s]
+
+    outs = pl.pallas_call(
+        functools.partial(_sampled_round_kernel, policy=policy,
+                          s_round=s_round, w=w, decay=float(decay), k=k,
+                          fluctuate=bool(fluctuate)),
+        grid=(1,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(pad1(state.n_sel), pad1(state.sum_ud), pad1(state.sum_ul),
+      pad1(state.sum_tinc), pad1(state.last_ud), pad1(state.last_ul),
+      jnp.pad(state.hist_ud, ((0, pad), (0, 0))) if pad else state.hist_ud,
+      jnp.pad(state.hist_ul, ((0, pad), (0, 0))) if pad else state.hist_ul,
+      pad1(state.hist_n), pad1(state.disc_n), pad1(state.disc_ud),
+      pad1(state.disc_ul), state.total.reshape(1),
+      state.disc_total.reshape(1), mask, cand_idx.astype(jnp.int32),
+      u2.astype(jnp.float32), pad1(theta_mu.astype(jnp.float32)),
+      pad1(gamma_mu.astype(jnp.float32)),
+      pad1(n_samples.astype(jnp.float32)),
+      jnp.asarray(eta, jnp.float32).reshape(1),
+      jnp.asarray(model_bits, jnp.float32).reshape(1),
       pad1(rand.astype(jnp.float32)),
       jnp.asarray(hyper, jnp.float32).reshape(1))
 

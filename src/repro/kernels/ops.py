@@ -40,7 +40,8 @@ def bandit_round(state, cand_idx, t_ud, t_ul, rand, hyper, *, policy: str,
     body op-by-op in Python and is only useful for parity testing, so the
     CPU production path is the reference itself.  Both paths are
     bitwise-identical (selections, times, state) to each other and to the
-    unfused select/schedule/observe pipeline.
+    unfused select/schedule/observe pipeline.  (The small-K fallback lives
+    one level up, in ``core.bandit_jax.make_round_fn`` — see FUSED_MIN_K.)
     """
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
@@ -52,6 +53,45 @@ def bandit_round(state, cand_idx, t_ud, t_ul, rand, hyper, *, policy: str,
     return _bandit_round.bandit_round_pallas(
         state, cand_idx, t_ud, t_ul, rand, hyper, policy=policy,
         s_round=s_round, decay=decay, interpret=interpret)
+
+
+def bandit_round_sampled(state, cand_idx, u2, rand, theta_mu, gamma_mu,
+                         n_samples, eta, model_bits, hyper, *, policy: str,
+                         s_round: int, decay: float = 1.0,
+                         fluctuate: bool = True,
+                         use_kernel: bool | None = None,
+                         interpret: bool | None = None):
+    """The streamed-sampling fused round: Eq. (8) resource times are drawn
+    AT THE CANDIDATE SLICE inside the round instead of arriving as [K]
+    arrays; returns ``(new_state, sel, round_time)``.
+
+    ``u2``: [2, C] uniforms (None when ``fluctuate`` is off);
+    ``theta_mu``/``gamma_mu``/``n_samples``: full-[K] means (``theta_mu``
+    carries any scenario multiplier); ``rand``: the random policy's [K]
+    uniform stream (None otherwise).  Routing mirrors ``bandit_round``:
+    TPU runs the Pallas kernel with the truncnorm transform in-VMEM
+    (kernels/bandit_round.py, ``sample`` mode); elsewhere the [C] slice is
+    gathered and transformed via ``kernels/ref.truncnorm_times_ref`` and
+    the round runs the sliced jnp reference.  (The small-K fallback lives
+    in ``core.bandit_jax.make_sampled_round_fn`` — see FUSED_MIN_K.)
+    """
+    k = theta_mu.shape[0]
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if not use_kernel:
+        safe_c = jnp.where(cand_idx < k, cand_idx, 0)
+        t_ud_c, t_ul_c = _ref.truncnorm_times_ref(
+            u2, theta_mu[safe_c], gamma_mu[safe_c], n_samples[safe_c], eta,
+            model_bits, fluctuate=fluctuate)
+        rand_c = None if rand is None else rand[safe_c]
+        return _ref.bandit_round_ref(
+            state, cand_idx, t_ud_c, t_ul_c, rand_c, hyper, policy=policy,
+            s_round=s_round, decay=decay, sliced=True)
+    interpret = _default_interpret() if interpret is None else interpret
+    return _bandit_round.bandit_round_pallas_sampled(
+        state, cand_idx, u2, rand, theta_mu, gamma_mu, n_samples, eta,
+        model_bits, hyper, policy=policy, s_round=s_round, decay=decay,
+        fluctuate=fluctuate, interpret=interpret)
 
 
 def ucb_scores(sums, n_sel, total, alpha: float = 1000.0,

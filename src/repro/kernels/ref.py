@@ -42,8 +42,38 @@ def flash_attention_ref(q, k, v, causal: bool = True):
     return o.astype(q.dtype)
 
 
+def truncnorm_times_ref(u2, mu_theta, mu_gamma, n_samples, eta, model_bits,
+                        *, fluctuate: bool = True):
+    """Eqs. (8)-(11) at the candidate slice: ONE fused two-draw transform.
+
+    ``u2``: [2, C] uniforms (row 0 -> throughput theta, row 1 -> capability
+    gamma — the layout ``make_sampled_round_fn``'s single ``[2, C]``
+    uniform call produces); ``mu_theta``/``mu_gamma``/``n_samples``: [C]
+    candidate-gathered means.  Both truncated normals run through one
+    stacked :func:`repro.sim.truncnorm.truncnorm_transform` call (erfinv is
+    the expensive op — batching theta+gamma halves its dispatches), then
+    t_UD = D_k / gamma, t_UL = M / theta.  Returns ([C] t_ud, [C] t_ul).
+
+    This is the jnp reference of the in-VMEM sampling body of the Pallas
+    bandit-round kernel, and the CPU production path of
+    ``ops.bandit_round_sampled``.
+    """
+    from repro.sim.truncnorm import truncnorm_transform
+
+    if fluctuate:
+        mu2 = jnp.stack([jnp.asarray(mu_theta, jnp.float32),
+                         jnp.asarray(mu_gamma, jnp.float32)])
+        drawn = truncnorm_transform(u2, mu2, eta)
+        theta, gamma = drawn[0], drawn[1]
+    else:
+        theta, gamma = mu_theta, mu_gamma
+    return (n_samples / jnp.maximum(gamma, 1e-9),
+            model_bits / jnp.maximum(theta, 1e-9))
+
+
 def bandit_round_ref(state, cand_idx, t_ud, t_ul, rand, hyper, *,
-                     policy: str, s_round: int, decay: float = 1.0):
+                     policy: str, s_round: int, decay: float = 1.0,
+                     sliced: bool = False):
     """One fused bandit round (score -> select -> schedule -> observe) on a
     core.bandit_jax.BanditState — the jnp oracle of
     kernels/bandit_round.py and the CPU fast path.
@@ -53,13 +83,20 @@ def bandit_round_ref(state, cand_idx, t_ud, t_ul, rand, hyper, *,
     are gathered once for the C candidates and Algorithm 1 / sort-free
     top-S (the shared ``core.bandit_jax.greedy_slots`` / ``top_slots``
     primitives, on the [C] slice) runs compacted; the winning slots map
-    back through ``cand_idx`` — sorted candidates make the lowest-slot
-    tie-break equal the numpy lowest-client-index rule.
+    back through ``cand_idx`` — sorted candidates make the compacted
+    argmax tie-break equal the numpy lowest-client-index rule.
     Returns ``(new_state, sel [s_round], round_time)``.
+
+    ``sliced`` flips the time encoding to the streamed-sampling fast path:
+    ``t_ud``/``t_ul``/``rand`` are already candidate-aligned [C] arrays
+    (slot i belongs to client ``cand_idx[i]``) and no [K] time array ever
+    exists — the schedule runs on slot-gathered values
+    (``schedule_gathered``) and ``observe`` scatters them back through
+    ``cand_idx``.
     """
     from repro.core import bandit_jax
 
-    k = t_ud.shape[0]
+    k = state.n_sel.shape[0]
     cvalid = cand_idx < k
     safe_c = jnp.where(cvalid, cand_idx, 0)
 
@@ -72,23 +109,29 @@ def bandit_round_ref(state, cand_idx, t_ud, t_ul, rand, hyper, *,
             return state.hist_ul[safe_c].sum(1)
         return getattr(state, name)[safe_c]
 
+    def at_c(x):
+        return None if x is None else (x if sliced else x[safe_c])
+
     obs = {name: col(name) for name in bandit_jax.POLICY_STATS[policy]}
     kind, a, b = bandit_jax.policy_scores(
         policy, obs, state.total, state.disc_total,
-        None if t_ud is None else t_ud[safe_c],
-        None if t_ul is None else t_ul[safe_c],
-        None if rand is None else rand[safe_c], hyper)
+        at_c(t_ud), at_c(t_ul), at_c(rand), hyper)
     if kind == "score":
         slots = bandit_jax.top_slots(a, cvalid, s_round)
     else:
         slots = bandit_jax.greedy_slots(a, b, cvalid, s_round)
-    sel = jnp.where(slots >= 0, cand_idx[jnp.where(slots >= 0, slots, 0)],
-                    -1).astype(jnp.int32)
+    ok = slots >= 0
+    safe_slot = jnp.where(ok, slots, 0)
+    sel = jnp.where(ok, cand_idx[safe_slot], -1).astype(jnp.int32)
 
-    round_time, incs = bandit_jax.schedule_selected(sel, t_ud, t_ul)
-    safe = jnp.where(sel >= 0, sel, 0)
-    state = bandit_jax.observe(state, sel, t_ud[safe], t_ul[safe], incs,
-                               decay=decay)
+    valid = sel >= 0
+    safe = jnp.where(valid, sel, 0)
+    if sliced:
+        sud, sul = t_ud[safe_slot], t_ul[safe_slot]
+    else:
+        sud, sul = t_ud[safe], t_ul[safe]
+    round_time, incs = bandit_jax.schedule_gathered(valid, sud, sul)
+    state = bandit_jax.observe(state, sel, sud, sul, incs, decay=decay)
     return state, sel, round_time
 
 

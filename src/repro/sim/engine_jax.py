@@ -21,6 +21,13 @@ Scenario dynamics (sim/scenarios.py) — correlated cell congestion, diurnal
 throughput drift, client churn — run inside the scan body, mirroring
 ``ScenarioResources``.
 
+Sampling (sim/truncnorm.py, kernels/ref.py): at K >= FAST_SAMPLING_MIN_K
+the sweep defaults to the streamed candidate-sliced path — candidates via
+a top-k-of-uniforms prefix draw, Eq. (8) times drawn only at the [C]
+polled slice inside the fused round — so nothing K-sized is ever sampled
+(``fast_sampling``; the legacy full-[R, K] presample stream is preserved
+bit-for-bit under ``fast_sampling=False``).
+
 Scaling (distributed/sharding.py): ``sweep(..., devices=N)`` splits the
 flattened grid axis over an N-device mesh with ``shard_map`` (bitwise the
 same per grid point), ``shard="clients"`` instead commits the client axis K
@@ -44,14 +51,35 @@ import numpy as np
 
 from repro.core import bandit_jax
 from repro.distributed import sharding as dist_sharding
+from repro.kernels.ref import truncnorm_times_ref
 from repro.sim import network
+from repro.sim import truncnorm
 from repro.sim.resources import PAPER_MODEL_BITS
 from repro.sim.scenarios import (CAP_HIGH, CAP_LOW, Scenario, get_scenario)
 from repro.utils.compat import suppress_unusable_donation_warnings
 
-SQRT2 = math.sqrt(2.0)
-_P_LO = 0.5 * (1.0 + math.erf(-1.0 / SQRT2))     # Phi(-1)
-_P_HI = 0.5 * (1.0 + math.erf(+1.0 / SQRT2))     # Phi(+1)
+SQRT2 = truncnorm.SQRT2
+_P_LO = truncnorm.P_LO     # Phi(-1)
+_P_HI = truncnorm.P_HI     # Phi(+1)
+
+# fast_sampling=None (the default) resolves to the streamed candidate-
+# sliced path at or above this many clients.  Below it the legacy batched
+# presample is already trivial (and slightly faster: per-round [C]-sized
+# draws inside the scan pay CPU op overhead that chunk-level batching
+# amortizes), and keeping small-K defaults on the legacy stream preserves
+# historical trajectories; at K >= 1024 the full-K permutation + [R, K]
+# presample dominate the whole sweep and the sliced stream wins decisively
+# (~7-8x e2e at K=10^4, BENCH_e2e_sweep.json).  Same auto-routing
+# philosophy as core.bandit_jax.FUSED_MIN_K / KERNEL_MIN_K.
+FAST_SAMPLING_MIN_K = 1024
+
+
+def resolve_fast_sampling(fast_sampling: bool | None, n_clients: int) -> bool:
+    """Resolve a ``fast_sampling`` argument (None = auto by K) — shared by
+    ``sweep()`` and fl/engine.accuracy_sweep()."""
+    if fast_sampling is None:
+        return n_clients >= FAST_SAMPLING_MIN_K
+    return bool(fast_sampling)
 
 
 # ---------------------------------------------------------------------------
@@ -60,20 +88,11 @@ _P_HI = 0.5 * (1.0 + math.erf(+1.0 / SQRT2))     # Phi(+1)
 
 def sample_truncated_normal(key: jnp.ndarray, mean: jnp.ndarray,
                             eta: jnp.ndarray) -> jnp.ndarray:
-    """JAX port of sim.resources.sample_truncated_normal (Eq. 8).
-
-    Inverse-CDF sampling of N(mu=mean, sigma^2=mean^eta) truncated to
-    [mean-sigma, mean+sigma]; Phi^-1 via erfinv (the numpy path uses
-    Acklam's approximation — both are exact to well below the fluctuation
-    scale).
-    """
-    mean = jnp.asarray(mean, jnp.float32)
-    sigma = jnp.sqrt(jnp.power(jnp.maximum(mean, 1e-12), eta))
-    u = jax.random.uniform(key, mean.shape, jnp.float32)
-    p = _P_LO + u * (_P_HI - _P_LO)
-    z = SQRT2 * jax.scipy.special.erfinv(2.0 * p - 1.0)
-    out = mean + sigma * z
-    return jnp.clip(out, jnp.maximum(mean - sigma, 1e-9), mean + sigma)
+    """JAX twin of sim.resources.sample_truncated_normal (Eq. 8); the ONE
+    jax implementation lives in sim/truncnorm.py (Phi^-1 via erfinv — the
+    numpy backend uses Acklam's approximation; both are exact to well below
+    the fluctuation scale, pinned by the cross-backend parity test)."""
+    return truncnorm.sample_truncated_normal_jax(key, mean, eta)
 
 
 def sample_times(n_samples: jnp.ndarray, theta_mu: jnp.ndarray,
@@ -261,6 +280,54 @@ def _cand_masks(key: jnp.ndarray, n_rounds: int, k: int,
     return _cand_masks_from_keys(jax.random.split(key, n_rounds), k, n_req)
 
 
+def _cand_topk_from_keys(keys: jnp.ndarray, k: int,
+                         n_req: int) -> jnp.ndarray:
+    """[R', n_req] int32 sorted candidate indices via a top-k-of-uniforms
+    prefix draw — the fast-sampling candidate stream.
+
+    The indices of the ``n_req`` largest of K iid uniforms are a uniform
+    random n_req-subset, exactly like a permutation prefix, but
+    ``lax.top_k`` is a partial select where ``jax.random.permutation`` pays
+    a full O(K log K) sort of all K arms — at K=10^4 the permutation draw
+    was ~5.3 ms/round, the single largest term of the whole sweep; this
+    draw is ~13x cheaper.  A DIFFERENT stream from
+    ``_cand_sorted_from_keys`` (same distribution), which is why it only
+    runs on the ``fast_sampling=True`` path.
+    """
+    def one(kk):
+        u = jax.random.uniform(kk, (k,), jnp.float32)
+        _, idx = jax.lax.top_k(u, n_req)
+        return jnp.sort(idx).astype(jnp.int32)
+    return jax.vmap(one)(keys)
+
+
+def sample_times_candidates(key: jnp.ndarray, cand_idx: jnp.ndarray,
+                            n_samples: jnp.ndarray, theta_mu: jnp.ndarray,
+                            gamma_mu: jnp.ndarray, eta, model_bits,
+                            *, fluctuate: bool = True
+                            ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Eqs. (8)-(11) at the candidate slice: ONE round's (t_UD, t_UL) for
+    the [C] polled candidates only.
+
+    ``cand_idx``: [C] int32 candidate indices (>= K entries padding);
+    ``theta_mu``/``gamma_mu``/``n_samples``: full-[K] means (``theta_mu``
+    already carries any scenario multiplier); ``key``: this round's
+    time-draw PRNG key.  Draws a single [2, C] uniform block and applies
+    the fused two-draw transform (kernels/ref.truncnorm_times_ref) — the
+    bit-identical stream ``make_sampled_round_fn`` consumes inside the
+    fused round with the same key, so this is both the standalone sampler
+    (tests, the unfused fast path) and the spec of the in-round draw.
+    Returns ([C] t_ud, [C] t_ul).
+    """
+    k = theta_mu.shape[0]
+    safe_c = jnp.where(cand_idx < k, cand_idx, 0)
+    u2 = (jax.random.uniform(key, (2,) + cand_idx.shape, jnp.float32)
+          if fluctuate else None)
+    return truncnorm_times_ref(u2, theta_mu[safe_c], gamma_mu[safe_c],
+                               n_samples[safe_c], eta, model_bits,
+                               fluctuate=fluctuate)
+
+
 def scenario_thr_mult(scen: Scenario, cell_id: jnp.ndarray,
                       keys: jnp.ndarray,
                       rounds: jnp.ndarray) -> jnp.ndarray:
@@ -339,7 +406,8 @@ def _client_constrain(tree, client_mesh, client_dim: int = 0):
 def _run_one(env: EnvArrays, model_bits, hyper, eta, seed,
              *, policy: str, scen: Scenario, n_rounds: int, s_round: int,
              n_req: int, fluctuate: bool, chunk_rounds: int | None = None,
-             client_mesh=None, fused: bool = True):
+             client_mesh=None, fused: bool = True,
+             fast_sampling: bool = True):
     """One grid point: the full protocol over rounds.  Returns [R] round
     times.  ``policy`` and the scenario dynamics are static — the sweep
     unrolls the policy axis so each compiled branch runs only its own
@@ -352,20 +420,37 @@ def _run_one(env: EnvArrays, model_bits, hyper, eta, seed,
     two are bitwise-identical in selections, round times and state —
     pinned by tests/test_bandit_round.py.
 
+    ``fast_sampling`` (default) is the streamed candidate-sliced sampling
+    path: candidates come from the top-k-of-uniforms prefix draw and the
+    Eq. (8) times are drawn only at the [C] candidate slice, inside the
+    fused round (``make_sampled_round_fn``) — nothing K-sized is ever
+    sampled, which is what makes ``sweep()`` fast end-to-end
+    (benchmarks/bench_e2e_sweep.py).  ``fast_sampling=False`` preserves
+    the legacy full-[R', K] presample stream exactly (replay parity with
+    historical runs); both paths are per-round-keyed, so chunked ==
+    unchunked bitwise either way, and fused == unfused bitwise within
+    each path.
+
     The round axis runs as an outer scan over chunks of ``chunk_rounds``
-    rounds (default: one chunk = the whole run).  Each chunk pre-samples
-    everything random — candidates, diurnal/congestion multipliers, the
-    truncated-normal draws — as [c, ...] arrays in a few fused ops, leaving
-    only select/schedule/observe in the inner scan; peak memory is O(c·K)
-    per grid point instead of O(R·K).  All draws come from per-round keys,
-    so every chunk size consumes the identical random stream.  With churn
+    rounds (default: one chunk = the whole run).  On the legacy path each
+    chunk pre-samples everything random — candidates, diurnal/congestion
+    multipliers, the truncated-normal draws — as [c, ...] arrays in a few
+    fused ops, leaving only select/schedule/observe in the inner scan;
+    peak memory is O(c·K) per grid point instead of O(R·K).  With churn
     the client means evolve between rounds and times sample per round
-    inside the inner scan instead.
+    inside the inner scan instead.  The fast path samples per round by
+    construction (only [C]-sized draws), so its peak extra memory is
+    O(c·C).
 
     ``client_mesh`` (static) pins the [K]-leading state and draws to a 1-D
     device mesh so GSPMD partitions the client axis (large-K layout).
     """
     k = env.mean_theta.shape[0]
+    # below the policy's FUSED_MIN_K the fused round's candidate compaction
+    # costs more than it saves — run the unfused mask pipeline instead
+    # (bitwise-identical results; the masks come straight from the per-round
+    # keys, so the fallback costs nothing over the fused=False baseline)
+    fused = fused and k >= bandit_jax.fused_min_k(policy)
     c = n_rounds if chunk_rounds is None else int(chunk_rounds)
     if n_rounds % c:
         raise ValueError(f"n_rounds={n_rounds} not divisible by "
@@ -406,6 +491,48 @@ def _run_one(env: EnvArrays, model_bits, hyper, eta, seed,
                                ("cong", k_cong), ("churn", k_churn)]}
     rounds = jnp.arange(1, n_rounds + 1, dtype=jnp.int32).reshape(
         n_chunks, c)
+
+    if fast_sampling:
+        if fused:
+            sampled_fn = bandit_jax.make_sampled_round_fn(
+                policy, s_round, fluctuate=fluctuate)
+
+        def fast_chunk_body(carry, xs):
+            state, mean_theta, mean_gamma = carry
+            kk, rr = xs
+            cands = _cand_topk_from_keys(kk["cand"], k, n_req)
+            thr_mult = scenario_thr_mult(scen, env.cell_id, kk["cong"], rr)
+
+            def step(carry2, x):
+                state, m_theta, m_gamma = carry2
+                cand, mult, k_t, kp, kc = x
+                mu_t = _client_constrain(m_theta * mult, client_mesh)
+                if fused:
+                    state, _sel, rt = sampled_fn(
+                        state, cand, kp, k_t, mu_t, m_gamma, env.n_samples,
+                        eta, model_bits, hyper)
+                else:
+                    t_ud_c, t_ul_c = sample_times_candidates(
+                        k_t, cand, env.n_samples, mu_t, m_gamma, eta,
+                        model_bits, fluctuate=fluctuate)
+                    t_ud, t_ul, mask = bandit_jax.scatter_cand_times(
+                        cand, t_ud_c, t_ul_c, k)
+                    state, rt, _sel = _round(state, mask, t_ud, t_ul,
+                                             select_fn, hyper, kp,
+                                             decay=decay)
+                if scen.churn_prob > 0.0:
+                    m_theta, m_gamma = churn_step(kc, m_theta, m_gamma,
+                                                  scen.churn_prob)
+                return (state, m_theta, m_gamma), rt
+
+            carry2, round_times = jax.lax.scan(
+                step, (state, mean_theta, mean_gamma),
+                (cands, thr_mult, kk["theta"], kk["pol"], kk["churn"]))
+            return carry2, round_times
+
+        carry0 = (state0, env.mean_theta, env.mean_gamma)
+        _, round_times = jax.lax.scan(fast_chunk_body, carry0, (keys, rounds))
+        return round_times.reshape(n_rounds)
 
     def chunk_body(carry, xs):
         state, mean_theta, mean_gamma = carry
@@ -453,12 +580,12 @@ def _run_one(env: EnvArrays, model_bits, hyper, eta, seed,
 
 @functools.partial(jax.jit, static_argnames=(
     "policies", "scen", "n_rounds", "s_round", "n_req", "fluctuate",
-    "chunk_rounds", "mesh", "shard", "fused"),
+    "chunk_rounds", "mesh", "shard", "fused", "fast_sampling"),
     donate_argnames=("eta", "seed"))
 def _run_grid(env: EnvArrays, model_bits, hypers, eta, seed,
               *, policies: tuple[str, ...], scen: Scenario, n_rounds,
               s_round, n_req, fluctuate, chunk_rounds=None, mesh=None,
-              shard="grid", fused=True):
+              shard="grid", fused=True, fast_sampling=True):
     """One jit call for the whole sweep: the policy axis is unrolled
     statically (each entry vmaps its own selection rule over the flattened
     [E*S] eta/seed axes); hypers: [P], eta/seed: [E*S], donated.
@@ -476,7 +603,8 @@ def _run_grid(env: EnvArrays, model_bits, hypers, eta, seed,
                               n_rounds=n_rounds, s_round=s_round,
                               n_req=n_req, fluctuate=fluctuate,
                               chunk_rounds=chunk_rounds,
-                              client_mesh=client_mesh, fused=fused)
+                              client_mesh=client_mesh, fused=fused,
+                              fast_sampling=fast_sampling)
         g = jax.vmap(f, in_axes=(None, None, None, 0, 0))
         if mesh is not None and shard == "grid":
             g = dist_sharding.shard_vmapped(g, mesh, sharded_argnums=(3, 4))
@@ -530,7 +658,8 @@ def sweep(scenario: Scenario | str = "paper-baseline",
           devices=None,
           shard: str = "grid",
           chunk_rounds: int | None = None,
-          fused: bool = True) -> SweepResult:
+          fused: bool = True,
+          fast_sampling: bool | None = None) -> SweepResult:
     """Run the full (policy x eta x seed) grid as ONE jit call.
 
     ``policies`` entries are names or (name, hyper) pairs — the hyper is the
@@ -559,6 +688,16 @@ def sweep(scenario: Scenario | str = "paper-baseline",
         bitwise-identical results, ~2-4x round throughput at large K.
         ``fused=False`` keeps the unfused select/schedule/observe pipeline
         (the baseline benchmarks/bench_round_kernel.py measures against).
+    ``fast_sampling``
+        Streamed candidate-sliced sampling: candidates from a
+        top-k-of-uniforms prefix draw, Eq. (8) times drawn only at the [C]
+        polled slice inside the fused round — O(R·C) sampling instead of
+        O(R·K), the end-to-end fast path (benchmarks/bench_e2e_sweep.py).
+        None (default) auto-selects it at K >= FAST_SAMPLING_MIN_K, where
+        the K-sized draws dominate the sweep; ``fast_sampling=False``
+        preserves the legacy full-[R, K] presample stream exactly (same
+        distribution, different PRNG consumption), so historical runs
+        replay bit-for-bit at any K.
     """
     scenario = get_scenario(scenario) if isinstance(scenario, str) else scenario
     if shard not in ("grid", "clients"):
@@ -575,6 +714,7 @@ def sweep(scenario: Scenario | str = "paper-baseline",
     seeds = tuple(range(seeds)) if isinstance(seeds, int) else tuple(seeds)
     etas = tuple(float(e) for e in etas)
     mesh = resolve_sweep_mesh(devices)
+    fast_sampling = resolve_fast_sampling(fast_sampling, n_clients)
 
     env = scenario.build_env(n_clients, np.random.default_rng(env_seed))
     env_arrays = EnvArrays.from_scenario(scenario, env)
@@ -600,7 +740,7 @@ def sweep(scenario: Scenario | str = "paper-baseline",
             policies=tuple(pol_names), scen=scenario, n_rounds=n_rounds,
             s_round=s_round, n_req=math.ceil(n_clients * frac_request),
             fluctuate=fluctuate, chunk_rounds=chunk_rounds, mesh=mesh,
-            shard=shard, fused=fused)
+            shard=shard, fused=fused, fast_sampling=fast_sampling)
     rts = np.asarray(rts)[:, :n_grid].reshape(
         len(pol_names), len(etas), len(seeds), n_rounds)
     return SweepResult(policies=tuple(pol_names), hypers=tuple(hypers),

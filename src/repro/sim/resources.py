@@ -20,74 +20,14 @@ import math
 import numpy as np
 
 from repro.sim.network import NetworkEnv
+# The Eq. (8) sampler itself lives in sim/truncnorm.py (the ONE numpy
+# implementation; the jax twin is sample_truncated_normal_jax there).
+# Re-exported here for back-compat: scenarios.py / nonstationary.py and
+# external callers keep importing it from this module.
+from repro.sim.truncnorm import (phi as _phi, phi_inv as _phi_inv,  # noqa: F401
+                                 sample_truncated_normal)
 
 SQRT2 = math.sqrt(2.0)
-
-
-# Vectorized erf built once. math.erf is exact; vectorize is fine at K<=1e6.
-_ERF = np.vectorize(math.erf, otypes=[np.float64])
-
-
-def _phi(x: np.ndarray) -> np.ndarray:
-    """Standard normal CDF via erf: Phi(x) = (1 + erf(x/sqrt(2))) / 2."""
-    return 0.5 * (1.0 + _ERF(np.asarray(x, dtype=np.float64) / SQRT2))
-
-
-def _phi_inv(p: np.ndarray) -> np.ndarray:
-    """Inverse standard normal CDF (Acklam's rational approximation).
-
-    Max abs error ~1.15e-9 over (0,1): far below the fluctuation scale here.
-    """
-    p = np.asarray(p, dtype=np.float64)
-    a = [-3.969683028665376e+01, 2.209460984245205e+02, -2.759285104469687e+02,
-         1.383577518672690e+02, -3.066479806614716e+01, 2.506628277459239e+00]
-    b = [-5.447609879822406e+01, 1.615858368580409e+02, -1.556989798598866e+02,
-         6.680131188771972e+01, -1.328068155288572e+01]
-    c = [-7.784894002430293e-03, -3.223964580411365e-01, -2.400758277161838e+00,
-         -2.549732539343734e+00, 4.374664141464968e+00, 2.938163982698783e+00]
-    d = [7.784695709041462e-03, 3.224671290700398e-01, 2.445134137142996e+00,
-         3.754408661907416e+00]
-    plow, phigh = 0.02425, 1 - 0.02425
-    x = np.empty_like(p)
-
-    lo = p < plow
-    hi = p > phigh
-    mid = ~(lo | hi)
-
-    if np.any(lo):
-        q = np.sqrt(-2 * np.log(p[lo]))
-        x[lo] = (((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4]) * q + c[5]) / \
-                ((((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1)
-    if np.any(hi):
-        q = np.sqrt(-2 * np.log(1 - p[hi]))
-        x[hi] = -(((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4]) * q + c[5]) / \
-                 ((((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1)
-    if np.any(mid):
-        q = p[mid] - 0.5
-        r = q * q
-        x[mid] = (((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r + a[4]) * r + a[5]) * q / \
-                 (((((b[0] * r + b[1]) * r + b[2]) * r + b[3]) * r + b[4]) * r + 1)
-    return x
-
-
-def sample_truncated_normal(
-    mean: np.ndarray, eta: float, rng: np.random.Generator
-) -> np.ndarray:
-    """Paper Eq. (8): truncated N(mu=mean, sigma^2=mean^eta) on [mean-sigma, mean+sigma].
-
-    Inverse-CDF sampling: x = mu + sigma * Phi^-1(Phi(alpha) + u (Phi(beta)-Phi(alpha)))
-    with alpha=(a-mu)/sigma=-1, beta=(b-mu)/sigma=+1.
-    """
-    mean = np.asarray(mean, dtype=np.float64)
-    sigma = np.sqrt(np.power(np.maximum(mean, 1e-12), eta))
-    # alpha = -1, beta = +1 always (a = mu - sigma, b = mu + sigma)
-    p_lo = _phi(np.array(-1.0))
-    p_hi = _phi(np.array(1.0))
-    u = rng.uniform(size=mean.shape)
-    z = _phi_inv(p_lo + u * (p_hi - p_lo))
-    out = mean + sigma * z
-    # numerical safety: clip exactly into [a, b] and keep strictly positive
-    return np.clip(out, np.maximum(mean - sigma, 1e-9), mean + sigma)
 
 
 @dataclasses.dataclass(frozen=True)

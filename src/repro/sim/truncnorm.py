@@ -1,0 +1,146 @@
+"""Eq. (8) truncated-normal sampling — the ONE implementation per backend.
+
+The paper resamples every client's throughput/capability each round from
+N(mu=mean, sigma^2=mean^eta) truncated to [mean-sigma, mean+sigma], by
+inverse-CDF over a uniform draw:
+
+    x = mu + sigma * Phi^-1(Phi(-1) + u * (Phi(+1) - Phi(-1)))
+
+This module holds exactly one implementation per backend, split at the
+*transform* (uniform -> sample) so call sites that manage their own RNG —
+and the cross-backend parity test feeding both transforms the SAME
+uniforms — share it:
+
+  * numpy: ``truncnorm_transform_np`` (Phi^-1 via Acklam's rational
+    approximation, float64) + the ``sample_truncated_normal(mean, eta,
+    rng)`` wrapper, consumed by ``sim/resources.py`` (which re-exports it
+    for back-compat), ``sim/scenarios.py`` and ``core/nonstationary.py``;
+  * jax: ``truncnorm_transform`` (Phi^-1 via erfinv, float32) + the
+    ``sample_truncated_normal_jax(key, mean, eta)`` wrapper, consumed by
+    ``sim/engine_jax.py``, ``kernels/ref.py::truncnorm_times_ref`` and the
+    Pallas bandit-round kernel body (the transform is pure elementwise
+    jnp, legal inside a kernel).
+
+Both Phi^-1 implementations are exact to well below the fluctuation scale
+(Acklam ~1.15e-9 abs; erfinv float32 ~1e-7 rel) — the parity test in
+tests/test_fast_sampling.py pins them against each other.
+
+jax is imported lazily inside the jax-side functions so the numpy
+reference simulator (sim/scenarios.py and below) stays importable on
+minimal hosts without jax installed.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+SQRT2 = math.sqrt(2.0)
+# truncation probabilities: alpha = -1, beta = +1 always (a = mu - sigma,
+# b = mu + sigma), computed once in float64 via the exact math.erf
+P_LO = 0.5 * (1.0 + math.erf(-1.0 / SQRT2))     # Phi(-1)
+P_HI = 0.5 * (1.0 + math.erf(+1.0 / SQRT2))     # Phi(+1)
+
+
+# ---------------------------------------------------------------------------
+# numpy backend
+# ---------------------------------------------------------------------------
+
+# Vectorized erf built once. math.erf is exact; vectorize is fine at K<=1e6.
+_ERF = np.vectorize(math.erf, otypes=[np.float64])
+
+
+def phi(x: np.ndarray) -> np.ndarray:
+    """Standard normal CDF via erf: Phi(x) = (1 + erf(x/sqrt(2))) / 2."""
+    return 0.5 * (1.0 + _ERF(np.asarray(x, dtype=np.float64) / SQRT2))
+
+
+def phi_inv(p: np.ndarray) -> np.ndarray:
+    """Inverse standard normal CDF (Acklam's rational approximation).
+
+    Max abs error ~1.15e-9 over (0,1): far below the fluctuation scale here.
+    """
+    p = np.asarray(p, dtype=np.float64)
+    a = [-3.969683028665376e+01, 2.209460984245205e+02, -2.759285104469687e+02,
+         1.383577518672690e+02, -3.066479806614716e+01, 2.506628277459239e+00]
+    b = [-5.447609879822406e+01, 1.615858368580409e+02, -1.556989798598866e+02,
+         6.680131188771972e+01, -1.328068155288572e+01]
+    c = [-7.784894002430293e-03, -3.223964580411365e-01, -2.400758277161838e+00,
+         -2.549732539343734e+00, 4.374664141464968e+00, 2.938163982698783e+00]
+    d = [7.784695709041462e-03, 3.224671290700398e-01, 2.445134137142996e+00,
+         3.754408661907416e+00]
+    plow, phigh = 0.02425, 1 - 0.02425
+    x = np.empty_like(p)
+
+    lo = p < plow
+    hi = p > phigh
+    mid = ~(lo | hi)
+
+    if np.any(lo):
+        q = np.sqrt(-2 * np.log(p[lo]))
+        x[lo] = (((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4]) * q + c[5]) / \
+                ((((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1)
+    if np.any(hi):
+        q = np.sqrt(-2 * np.log(1 - p[hi]))
+        x[hi] = -(((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4]) * q + c[5]) / \
+                 ((((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1)
+    if np.any(mid):
+        q = p[mid] - 0.5
+        r = q * q
+        x[mid] = (((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r + a[4]) * r + a[5]) * q / \
+                 (((((b[0] * r + b[1]) * r + b[2]) * r + b[3]) * r + b[4]) * r + 1)
+    return x
+
+
+def truncnorm_transform_np(u: np.ndarray, mean: np.ndarray,
+                           eta: float) -> np.ndarray:
+    """Eq. (8) transform, numpy backend: uniforms ``u`` in [0, 1) to
+    truncated-normal samples around ``mean`` (same shape)."""
+    mean = np.asarray(mean, dtype=np.float64)
+    sigma = np.sqrt(np.power(np.maximum(mean, 1e-12), eta))
+    z = phi_inv(P_LO + u * (P_HI - P_LO))
+    out = mean + sigma * z
+    # numerical safety: clip exactly into [a, b] and keep strictly positive
+    return np.clip(out, np.maximum(mean - sigma, 1e-9), mean + sigma)
+
+
+def sample_truncated_normal(
+    mean: np.ndarray, eta: float, rng: np.random.Generator
+) -> np.ndarray:
+    """Paper Eq. (8): truncated N(mu=mean, sigma^2=mean^eta) on
+    [mean-sigma, mean+sigma], inverse-CDF sampled from ``rng``."""
+    return truncnorm_transform_np(rng.uniform(size=np.shape(mean)), mean, eta)
+
+
+# ---------------------------------------------------------------------------
+# jax backend (lazy imports: see module docstring)
+# ---------------------------------------------------------------------------
+
+def truncnorm_transform(u, mean, eta):
+    """Eq. (8) transform, jax backend: uniforms ``u`` to truncated-normal
+    samples around ``mean`` (broadcastable shapes; float32).
+
+    Pure elementwise jnp — shared by the engines' full-[K] presample, the
+    candidate-sliced fast path (kernels/ref.py) and the Pallas
+    bandit-round kernel body, so every jax consumer draws from the
+    bit-identical transform.
+    """
+    import jax
+    import jax.numpy as jnp
+    mean = jnp.asarray(mean, jnp.float32)
+    sigma = jnp.sqrt(jnp.power(jnp.maximum(mean, 1e-12), eta))
+    p = P_LO + u * (P_HI - P_LO)
+    z = SQRT2 * jax.scipy.special.erfinv(2.0 * p - 1.0)
+    out = mean + sigma * z
+    return jnp.clip(out, jnp.maximum(mean - sigma, 1e-9), mean + sigma)
+
+
+def sample_truncated_normal_jax(key, mean, eta):
+    """JAX twin of :func:`sample_truncated_normal` (Eq. 8): draws the
+    uniforms from ``key`` and applies :func:`truncnorm_transform`."""
+    import jax
+    import jax.numpy as jnp
+    mean = jnp.asarray(mean, jnp.float32)
+    u = jax.random.uniform(key, mean.shape, jnp.float32)
+    return truncnorm_transform(u, mean, eta)

@@ -40,8 +40,12 @@ DETERMINISTIC = [p for p in bandit_jax.POLICY_NAMES if p != "random"]
 def _fused_loop(policy, masks, t_ud, t_ul, s_round, n_cand, key=None,
                 **round_kw):
     """Drive the fused round over presampled inputs; returns (sels, rts,
-    final state)."""
+    final state).  ``use_kernel=False`` pins the candidate-compacted
+    reference: the small-K auto-routing (FUSED_MIN_K) would otherwise send
+    some policies to the mask path at these test sizes, and these tests
+    exist to cover the compacted formulation."""
     k = t_ud.shape[1]
+    round_kw.setdefault("use_kernel", False)
     round_fn = bandit_jax.make_round_fn(policy, s_round, **round_kw)
     hyper = jnp.float32(bandit_jax.DEFAULT_HYPERS[policy])
     state = bandit_jax.BanditState.create(k)
@@ -110,7 +114,9 @@ def _both_paths(policy, k=50, s_round=5, n_cand=12, rounds=20, seed=0):
         base_sels.append(np.asarray(sel))
         base_rts.append(float(rt))
 
-    round_fn = bandit_jax.make_round_fn(policy, s_round)
+    # use_kernel=False pins the compacted reference (k=50 is below the
+    # FUSED_MIN_K auto-routing threshold for several policies)
+    round_fn = bandit_jax.make_round_fn(policy, s_round, use_kernel=False)
     fstate = bandit_jax.BanditState.create(k)
     fused_sels, fused_rts = [], []
     for r in range(rounds):
@@ -202,7 +208,7 @@ def _degenerate_paths(policy, masks, t_ud, t_ul, s_round, n_cand):
     keys = jax.random.split(jax.random.PRNGKey(5), masks.shape[0])
     select_fn = bandit_jax.make_select_fn(policy, s_round)
     decay = bandit_jax.policy_decay(policy)
-    round_fn = bandit_jax.make_round_fn(policy, s_round)
+    round_fn = bandit_jax.make_round_fn(policy, s_round, use_kernel=False)
     hyper = jnp.float32(bandit_jax.DEFAULT_HYPERS[policy])
     st_b = st_f = bandit_jax.BanditState.create(k)
     b_sel, b_rt, f_sel, f_rt = [], [], [], []
@@ -217,6 +223,41 @@ def _degenerate_paths(policy, masks, t_ud, t_ul, s_round, n_cand):
         f_sel.append(np.asarray(sel)), f_rt.append(float(rt))
     return (np.stack(b_sel), np.asarray(b_rt), st_b,
             np.stack(f_sel), np.asarray(f_rt), st_f)
+
+
+@pytest.mark.parametrize("policy", sorted(bandit_jax.FUSED_MIN_K))
+def test_small_k_auto_routing_bitwise(policy):
+    """Below FUSED_MIN_K[policy] the default round auto-routes to the
+    unfused mask pipeline (the compaction overhead regressed these
+    policies at K=100, BENCH_round_kernel.json) — routed and pinned-fused
+    rounds must stay bitwise-identical, and the threshold must actually
+    route at these sizes."""
+    k = 50
+    assert k < bandit_jax.fused_min_k(policy)
+    b_sel, b_rt, b_st, f_sel, f_rt, f_st = _both_paths(policy, k=k)
+    np.testing.assert_array_equal(f_sel, b_sel)         # pinned fused
+    # now the default (auto-routed) round over the same inputs
+    key = jax.random.PRNGKey(0)
+    kc, kt, kg, kp = jax.random.split(key, 4)
+    cand_keys = jax.random.split(kc, 20)
+    t_ud = jax.random.uniform(kt, (20, k), jnp.float32, 1.0, 100.0)
+    t_ul = jax.random.uniform(kg, (20, k), jnp.float32, 1.0, 100.0)
+    pol_keys = jax.random.split(kp, 20)
+    hyper = jnp.float32(bandit_jax.DEFAULT_HYPERS[policy])
+    routed = jax.jit(bandit_jax.make_round_fn(policy, 5))
+    state = bandit_jax.BanditState.create(k)
+    for r in range(20):
+        cand = engine_jax._cand_sorted_from_keys(cand_keys[r][None], k,
+                                                 12)[0]
+        state, sel, rt = routed(state, cand, pol_keys[r], t_ud[r], t_ul[r],
+                                hyper)
+        np.testing.assert_array_equal(np.asarray(sel), f_sel[r])
+        assert float(rt) == f_rt[r]
+    for f in dataclasses.fields(state):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(state, f.name)),
+            np.asarray(getattr(f_st, f.name)),
+            err_msg=f"routed state.{f.name} diverged ({policy})")
 
 
 # ---------------------------------------------------------------------------
