@@ -1,0 +1,142 @@
+"""Async bounded-staleness serving benchmark + its correctness gates.
+
+PR 8 added the async serving engine (sim/async_engine.py): in-flight
+updates in a fixed-slot buffer inside one ``lax.scan`` over ticks, FedBuff
+aggregation of the first ``buffer_size`` completions, bandit observation at
+completion time.  This bench measures serving throughput (ticks/s, compile
+excluded) at paper scale and at large K, and doubles as the CI gate for
+the subsystem — the run FAILS if
+
+  * the degenerate reduction loses bitwise equality: with ``arrival="full"``,
+    schedule-paced ticks, ``buffer_size == s_dispatch == s_round`` and an
+    unbounded staleness cap, per-tick times must equal the synchronous
+    ``sweep(fast_sampling=False, fused=False)`` round times bitwise
+    (jit-vs-jit; every policy), or
+  * a segmented run (stop at a tick, snapshot, restore, continue) loses
+    bitwise equality with the uninterrupted run — the crash/resume
+    contract launch/serve_fl.py builds on.
+
+Results land in ``BENCH_async_serve.json`` at the repo root.
+
+  PYTHONPATH=src python benchmarks/bench_async_serve.py [--fast]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def check_sync_reduction(n_ticks: int = 12) -> list[str]:
+    """Bitwise degenerate-reduction gate, every policy."""
+    import numpy as np
+
+    from repro.core import bandit_jax
+    from repro.sim import async_engine, engine_jax
+
+    cfg = async_engine.AsyncConfig(
+        n_slots=5, buffer_size=5, max_staleness=10**6, s_dispatch=5,
+        n_req=10, tick_dt=None, arrival="full")
+    failures = []
+    for pol in bandit_jax.POLICY_NAMES:
+        res = async_engine.serve("paper-baseline", pol, n_ticks=n_ticks,
+                                 seed=0, cfg=cfg, eta=1.0)
+        sw = engine_jax.sweep("paper-baseline", policies=(pol,), etas=(1.0,),
+                              seeds=[0], n_rounds=n_ticks, n_clients=100,
+                              s_round=5, frac_request=0.1, fused=False,
+                              fast_sampling=False)
+        if not np.array_equal(np.asarray(res.dt),
+                              sw.round_times.reshape(-1)):
+            failures.append(f"sync-reduction: {pol} round times diverge")
+    return failures
+
+
+def check_resume(n_ticks: int = 40, split: int = 17) -> list[str]:
+    """Bitwise segmented-vs-straight gate (snapshot round-trip via host)."""
+    import jax
+    import numpy as np
+
+    from repro.sim import async_engine
+
+    cfg = async_engine.AsyncConfig(
+        n_slots=16, buffer_size=4, max_staleness=12, s_dispatch=4,
+        n_req=10, arrival="poisson", arrival_rate=3.0)
+    kw = dict(seed=7, cfg=cfg, total_ticks=n_ticks)
+    full = async_engine.serve("diurnal-drift", "discounted_ucb",
+                              n_ticks=n_ticks, **kw)
+    r1 = async_engine.serve("diurnal-drift", "discounted_ucb",
+                            n_ticks=split, **kw)
+    snap = jax.device_get(async_engine.snapshot_tree(r1.state))
+    r2 = async_engine.serve("diurnal-drift", "discounted_ucb",
+                            n_ticks=n_ticks - split, t0=split,
+                            state=async_engine.state_from_snapshot(snap),
+                            **kw)
+    failures = []
+    if not np.array_equal(np.concatenate([r1.dt, r2.dt]), full.dt):
+        failures.append("resume: dt trace diverges")
+    if not np.array_equal(np.concatenate([r1.selected, r2.selected]),
+                          full.selected):
+        failures.append("resume: selections diverge")
+    same_state = jax.tree_util.tree_all(jax.tree.map(
+        lambda a, b: bool(np.array_equal(np.asarray(a), np.asarray(b))),
+        jax.device_get(async_engine.snapshot_tree(r2.state)),
+        jax.device_get(async_engine.snapshot_tree(full.state))))
+    if not same_state:
+        failures.append("resume: final state diverges")
+    return failures
+
+
+def bench_throughput(k: int, n_ticks: int, cfg_kw: dict) -> dict:
+    """Serving ticks/s for one compiled segment (compile excluded)."""
+    from repro.sim import async_engine
+
+    cfg = async_engine.AsyncConfig(**cfg_kw)
+    kw = dict(policy="elementwise_ucb", n_ticks=n_ticks, seed=0, cfg=cfg,
+              n_clients=k)
+    async_engine.serve("paper-baseline", **kw)            # compile
+    best = float("inf")
+    for _ in range(2):
+        t0 = time.time()
+        res = async_engine.serve("paper-baseline", **kw)
+        best = min(best, time.time() - t0)
+    return {"k": k, "ticks": n_ticks, "s": round(best, 3),
+            "ticks_per_s": round(n_ticks / max(best, 1e-9), 1),
+            "aggregated": int(res.state.n_aggregated),
+            "dropped": int(res.state.n_dropped)}
+
+
+def main(fast: bool = False) -> list[str]:
+    out = ["name,us_per_call,derived"]
+
+    failures = check_sync_reduction() + check_resume()
+    results: dict = {"parity_failures": failures}
+    out.append("async_serve/parity,,"
+               f"{'OK (sync reduction + resume, bitwise)' if not failures else failures}")
+
+    ticks = 200 if fast else 1000
+    cfg_kw = dict(n_slots=32, buffer_size=5, max_staleness=50,
+                  s_dispatch=5, n_req=10, arrival="poisson",
+                  arrival_rate=5.0)
+    results["throughput"] = {}
+    for k in ((100,) if fast else (100, 2048)):
+        t = bench_throughput(k, ticks, cfg_kw)
+        results["throughput"][str(k)] = t
+        out.append(f"async_serve/K{k},{1e6 * t['s'] / ticks:.0f},"
+                   f"{t['ticks_per_s']} ticks/s "
+                   f"(agg={t['aggregated']} drop={t['dropped']})")
+
+    (ROOT / "BENCH_async_serve.json").write_text(
+        json.dumps(results, indent=2, sort_keys=True) + "\n")
+    if failures:
+        raise AssertionError("async serving parity gate failed: "
+                             + "; ".join(failures))
+    return out
+
+
+if __name__ == "__main__":
+    for line in main(fast="--fast" in sys.argv):
+        print(line)

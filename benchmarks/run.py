@@ -11,6 +11,8 @@ benches.  Prints ``name,us_per_call,derived`` CSV lines.
   e2e_sweep — whole sweep() wall clock, streamed candidate-sliced sampling
             vs the legacy presample, with bitwise parity gates on both
             paths (BENCH_e2e_sweep.json)
+  async_serve — bounded-staleness serving engine throughput, with bitwise
+            sync-reduction and crash/resume gates (BENCH_async_serve.json)
   roofline— per (arch x shape) roofline terms from the dry-run artifacts
   scale   — selection-at-scale: vectorized UCB scoring for 1e6 arms
   fl_engine — learning-coupled engine vs the classic host training loop
@@ -48,9 +50,10 @@ def main() -> None:
                     help="comma-separated section filter")
     args = ap.parse_args()
 
-    from benchmarks import (bench_accuracy, bench_convergence, bench_drift,
-                            bench_e2e_sweep, bench_fl_engine, bench_kernels,
-                            bench_roofline, bench_round_kernel, bench_scale,
+    from benchmarks import (bench_accuracy, bench_async_serve,
+                            bench_convergence, bench_drift, bench_e2e_sweep,
+                            bench_fl_engine, bench_kernels, bench_roofline,
+                            bench_round_kernel, bench_scale,
                             bench_selection, bench_sharded_sweep,
                             bench_sweep)
     sections = {
@@ -61,6 +64,7 @@ def main() -> None:
         "kernels": bench_kernels.main,
         "round_kernel": bench_round_kernel.main,
         "e2e_sweep": bench_e2e_sweep.main,
+        "async_serve": bench_async_serve.main,
         "roofline": bench_roofline.main,
         "scale": bench_scale.main,
         "sweep": bench_sweep.main,

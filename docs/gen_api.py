@@ -22,7 +22,9 @@ OUT = Path(__file__).resolve().parent / "api.md"
 MODULES = [
     ("repro.core.bandit_jax", "Vectorized bandit core"),
     ("repro.sim.engine_jax", "Time-only sweep engine"),
+    ("repro.sim.async_engine", "Async bounded-staleness serving engine"),
     ("repro.fl.engine", "Learning-coupled FL engine"),
+    ("repro.launch.serve_fl", "Resumable serving driver"),
     ("repro.fl.metrics", "Time-to-accuracy metrics"),
     ("repro.distributed.sharding", "Mesh / sharding layer"),
     ("repro.distributed.fl_parallel", "Pod-mesh cohort runtime"),

@@ -148,3 +148,18 @@ def restore_bandit_state(stats, tree: dict) -> None:
               "hist_ud", "hist_ul", "hist_n"):
         getattr(stats, k)[...] = tree[k]
     stats.total_sel = int(tree["total_sel"])
+
+
+def bandit_jax_state_tree(state) -> dict:
+    """core.bandit_jax.BanditState -> checkpointable pytree.  Unlike the
+    numpy twin above, the on-device state carries the ``disc_*``
+    discounted statistics — every field round-trips (lazy import keeps
+    this module free of a hard jax-engine dependency)."""
+    from repro.core import bandit_jax
+    return bandit_jax.state_tree(state)
+
+
+def restore_bandit_jax_state(tree: dict):
+    """Inverse of :func:`bandit_jax_state_tree` -> BanditState."""
+    from repro.core import bandit_jax
+    return bandit_jax.state_from_tree(tree)

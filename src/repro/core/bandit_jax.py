@@ -119,6 +119,19 @@ class BanditState:
         return dataclasses.replace(self, **kw)
 
 
+def state_tree(state: BanditState) -> dict:
+    """Flatten a :class:`BanditState` to a plain dict-of-arrays pytree —
+    every field, including the ``disc_*`` discounted stats — so
+    checkpoint.ckpt can persist it without pickling a custom treedef."""
+    return {f.name: getattr(state, f.name)
+            for f in dataclasses.fields(state)}
+
+
+def state_from_tree(tree: dict) -> BanditState:
+    """Inverse of :func:`state_tree` (accepts numpy or jnp leaves)."""
+    return BanditState(**{k: jnp.asarray(v) for k, v in tree.items()})
+
+
 def ucb_bonus_arrays(n_sel: jnp.ndarray, total: jnp.ndarray) -> jnp.ndarray:
     """UCB exploration bonus sqrt(ln ΣN / 2 N_k) on raw arrays of any shape
     (full [K] state or a candidate-compacted [C] slice); BIG for
@@ -302,6 +315,25 @@ def schedule_gathered(valid: jnp.ndarray, ud: jnp.ndarray,
     """The realized-schedule arithmetic of :func:`schedule_selected` on
     per-slot gathered times (``ud``/``ul``: [S], entries at ``~valid``
     slots are ignored).  Returns (round_time, incs[S])."""
+    round_time, incs, _ = schedule_completions(valid, ud, ul)
+    return round_time, incs
+
+
+def schedule_completions(valid: jnp.ndarray, ud: jnp.ndarray,
+                         ul: jnp.ndarray
+                         ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """:func:`schedule_gathered` plus per-slot completion offsets.
+
+    Returns ``(round_time, incs[S], finish[S])`` where ``finish[i]`` is the
+    offset from round start at which slot ``i``'s sequential upload ends
+    under the realized schedule (the scheduler clock after processing slot
+    ``i``; invalid slots inherit the previous clock value, and the last
+    valid slot's finish IS ``round_time``, bitwise).  The async serving
+    engine (sim/async_engine.py) stamps each dispatched update's absolute
+    completion time as ``now + finish[i]``; the sync engines read only the
+    first two outputs through :func:`schedule_gathered` — one copy of the
+    schedule arithmetic serves both serving modes.
+    """
     ud = jnp.where(valid, ud, 0.0)
     ul = jnp.where(valid, ul, 0.0)
 
@@ -309,8 +341,9 @@ def schedule_gathered(valid: jnp.ndarray, ud: jnp.ndarray,
     def tbody(t, x):
         ud_k, ul_k, v = x
         t2 = jnp.maximum(t, t_d + ud_k) + ul_k
-        return jnp.where(v, t2, t), None
-    round_time, _ = jax.lax.scan(tbody, t_d, (ud, ul, valid))
+        t_new = jnp.where(v, t2, t)
+        return t_new, t_new
+    round_time, finish = jax.lax.scan(tbody, t_d, (ud, ul, valid))
 
     def ibody(carry, x):
         t, td = carry
@@ -321,7 +354,7 @@ def schedule_gathered(valid: jnp.ndarray, ud: jnp.ndarray,
                 jnp.where(v, inc, 0.0))
     _, incs = jax.lax.scan(ibody, (jnp.float32(0), jnp.float32(0)),
                            (ud, ul, valid))
-    return round_time, incs
+    return round_time, incs, finish
 
 
 # ---------------------------------------------------------------------------

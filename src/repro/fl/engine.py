@@ -917,6 +917,180 @@ def accuracy_sweep(scenario: Scenario | str = "paper-baseline",
 
 
 # ---------------------------------------------------------------------------
+# Async serving twin: FedBuff-style staleness-weighted aggregation.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=(
+    "scen", "acfg", "policy", "epochs", "batch_size", "cfg", "fluctuate",
+    "native_perm"))
+def _async_fl_segment(task: FlTask, state, buf_delta, buf_w, params_flat,
+                      keys: dict, *, scen: Scenario, acfg, policy: str,
+                      eta, model_bits, hyper, epochs: int, batch_size: int,
+                      cfg: cnn.CnnConfig, fluctuate: bool,
+                      native_perm: bool):
+    """The learning-coupled async tick scan (see ``async_accuracy_run``).
+
+    Rides the time-only engine's tick machinery (sim/async_engine.py:
+    identical poll/dispatch/clock/completion bookkeeping and key streams)
+    and adds the model side: the dispatched cohort trains from the
+    *current* model — that snapshot is what goes stale — its flattened
+    delta parks in the buffer row of its slot, and each tick the first
+    ``buffer_size`` completions apply as one FedBuff server update with
+    per-update weight ``D_k * (1 + staleness)**-staleness_power``.
+    """
+    from repro.sim import async_engine
+
+    unravel = ravel_pytree(task.params0)[1]
+    client_update = make_client_update(
+        functools.partial(cnn.loss_fn, cfg=cfg),
+        epochs=epochs, batch_size=batch_size, native_perm=native_perm)
+    evaluate = make_evaluator(functools.partial(cnn.apply, cfg=cfg))
+    select_fn = bandit_jax.make_select_fn(policy, acfg.s_dispatch)
+    decay = bandit_jax.policy_decay(policy)
+    cnt = task.part_count.astype(jnp.float32)
+
+    def tick(carry, kk):
+        state, buf_delta, buf_w, params_flat = carry
+        t_ud, t_ul, cand_mask, n_arr = async_engine.poll_inputs(
+            scen, task.env, acfg, state, kk, eta=eta,
+            model_bits=model_bits, fluctuate=fluctuate)
+        sel, target, finish, rt, incs, _ = async_engine.dispatch_plan(
+            state, cand_mask, kk["pol"], t_ud, t_ul, n_arr, hyper,
+            select_fn, acfg)
+
+        # the cohort trains from the model AS OF dispatch — lr follows the
+        # aggregation count (the async analogue of the round counter)
+        valid = sel >= 0
+        safe = jnp.where(valid, sel, 0)
+        params = unravel(params_flat)
+        # lr follows the *virtual round* (aggregations / buffer_size): one
+        # buffer flush is the async analogue of a sync round, so decay
+        # paces with model updates, not wall-clock ticks
+        lr = jnp.float32(paper_lr(state.n_aggregated.astype(jnp.float32)
+                                  / acfg.buffer_size))
+        ckeys = jax.vmap(lambda i: jax.random.fold_in(kk["perm"], i))(safe)
+        trained = jax.vmap(client_update,
+                           in_axes=(None, None, None, 0, 0, None, 0))(
+            params, task.train_x, task.train_y, task.part_idx[safe],
+            task.part_count[safe], lr, ckeys)
+        deltas = (jax.vmap(lambda t: ravel_pytree(t)[0])(trained)
+                  - params_flat[None, :])
+        w = jnp.where(valid, cnt[safe], 0.0)
+
+        state = async_engine.admit(state, sel, target, finish, incs,
+                                   t_ud, t_ul)
+        buf_delta = buf_delta.at[target].set(deltas, mode="drop")
+        buf_w = buf_w.at[target].set(w, mode="drop")
+
+        dt = async_engine.advance_clock(state, sel, rt, acfg)
+        now = state.now + dt
+
+        agg_slots, agg_mask, drop_mask, staleness = (
+            async_engine.completion_plan(state, now, acfg))
+        idx, ud_o, ul_o, inc_o = async_engine.gather_aggregated(
+            state, agg_slots, acfg)
+        bandit = bandit_jax.observe(state.bandit, idx, ud_o, ul_o, inc_o,
+                                    decay=decay)
+
+        # FedBuff server update over this tick's aggregated completions
+        in_range = agg_slots < acfg.n_slots
+        safe_s = jnp.where(in_range, agg_slots, 0)
+        sw = (async_engine.staleness_weights(staleness[safe_s],
+                                             acfg.staleness_power)
+              * buf_w[safe_s] * in_range)
+        wsum = sw.sum()
+        upd = jnp.einsum("s,sn->n", sw, buf_delta[safe_s])
+        params_flat = params_flat + jnp.where(
+            wsum > 0.0, upd / jnp.maximum(wsum, 1e-9), 0.0)
+
+        n_agg = agg_mask.sum().astype(jnp.int32)
+        clear = agg_mask | drop_mask
+        mean_theta, mean_gamma = state.mean_theta, state.mean_gamma
+        if scen.churn_prob > 0.0:
+            mean_theta, mean_gamma = engine_jax.churn_step(
+                kk["churn"], mean_theta, mean_gamma, scen.churn_prob)
+        state = state.replace(
+            bandit=bandit,
+            buf_client=jnp.where(clear, -1, state.buf_client),
+            mean_theta=mean_theta, mean_gamma=mean_gamma,
+            now=now, tick=state.tick + 1,
+            n_aggregated=state.n_aggregated + n_agg,
+            n_dropped=state.n_dropped + drop_mask.sum().astype(jnp.int32))
+
+        acc = evaluate(unravel(params_flat), task.test_x, task.test_y,
+                       task.test_mask)
+        trace = {"dt": dt, "now": now, "selected": sel, "accuracy": acc,
+                 "admitted": valid.sum().astype(jnp.int32),
+                 "aggregated": n_agg,
+                 "dropped": drop_mask.sum().astype(jnp.int32),
+                 "buffered": (jnp.where(clear, -1, state.buf_client)
+                              >= 0).sum().astype(jnp.int32)}
+        return (state, buf_delta, buf_w, params_flat), trace
+
+    return jax.lax.scan(tick, (state, buf_delta, buf_w, params_flat), keys)
+
+
+def async_accuracy_run(scenario: Scenario | str = "paper-baseline",
+                       policy: str = "elementwise_ucb",
+                       *, n_ticks: int = 50, seed: int = 0,
+                       acfg=None, task: FlTask | None = None,
+                       n_clients: int = 100,
+                       cfg: cnn.CnnConfig = cnn.CnnConfig(),
+                       epochs: int = PAPER_EPOCHS,
+                       batch_size: int = PAPER_BATCH,
+                       eta: float = 1.5, model_bits: float | None = None,
+                       hyper: float | None = None, fluctuate: bool = True,
+                       fast_perm: bool | None = None,
+                       **task_kwargs) -> dict:
+    """Serving-mode accuracy run: the bounded-staleness async protocol
+    (sim/async_engine.py) coupled to real local training.
+
+    Where ``accuracy_sweep`` closes every round, this run keeps a
+    fixed-slot buffer of in-flight model deltas: each tick dispatches a
+    bandit-selected cohort that trains from the current model, and the
+    first ``acfg.buffer_size`` completions apply as one FedBuff-style
+    server update with staleness-discounted weights (over-stale deltas are
+    dropped).  Returns per-tick ``elapsed``/``accuracy``/``selected``
+    traces plus the admitted/aggregated/dropped counters and final params.
+    """
+    from repro.sim import async_engine
+
+    scen = get_scenario(scenario) if isinstance(scenario, str) else scenario
+    acfg = acfg or async_engine.AsyncConfig()
+    if task is None:
+        task = make_cnn_task(scen, n_clients, cfg=cfg,
+                             batch_size=batch_size, **task_kwargs)
+    elif task_kwargs:
+        raise ValueError("pass either a prebuilt task or task_kwargs")
+    if hyper is None:
+        hyper = bandit_jax.DEFAULT_HYPERS[policy]
+    if model_bits is None:
+        model_bits = 8.0 * tree_bytes(task.params0)
+    native_perm = (_native_perm_auto(task) if fast_perm is None
+                   else bool(fast_perm))
+
+    params_flat = ravel_pytree(task.params0)[0]
+    state = async_engine.AsyncState.create(task.env, acfg)
+    buf_delta = jnp.zeros((acfg.n_slots, params_flat.shape[0]), jnp.float32)
+    buf_w = jnp.zeros(acfg.n_slots, jnp.float32)
+    keys = async_engine.tick_keys(seed, n_ticks, 0, n_ticks, perm=True)
+
+    (state, _, _, params_flat), tr = _async_fl_segment(
+        task, state, buf_delta, buf_w, params_flat, keys, scen=scen,
+        acfg=acfg, policy=policy, eta=jnp.float32(eta),
+        model_bits=jnp.float32(model_bits), hyper=jnp.float32(hyper),
+        epochs=epochs, batch_size=batch_size, cfg=cfg, fluctuate=fluctuate,
+        native_perm=native_perm)
+    tr = jax.device_get(tr)
+    return {"dt": tr["dt"], "elapsed": tr["now"],
+            "accuracy": tr["accuracy"], "selected": tr["selected"],
+            "admitted": tr["admitted"], "aggregated": tr["aggregated"],
+            "dropped": tr["dropped"], "buffered": tr["buffered"],
+            "state": state,
+            "params": ravel_pytree(task.params0)[1](params_flat)}
+
+
+# ---------------------------------------------------------------------------
 # The host-loop reference twin (replay parity + benchmark baseline).
 # ---------------------------------------------------------------------------
 

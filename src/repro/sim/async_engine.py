@@ -1,0 +1,502 @@
+"""Asynchronous bounded-staleness serving engine (FedBuff-style).
+
+The paper's protocol (Algorithm 1 + Eq. 8) closes every round: select a
+cohort, wait for the realized schedule, aggregate, repeat.  Production FL
+in mobile networks is open-ended — clients arrive in bursts, go stale, and
+return updates long after the model moved on.  This module models that
+regime **without leaving the device**: in-flight client updates live in a
+fixed-slot buffer carried through one ``lax.scan`` over *ticks*, so a
+million-tick serving simulation is still a single compiled scan.
+
+Per tick, in order:
+
+  1. **Arrivals** — a scenario-driven arrival process (``arrival="poisson"``
+     draws Poisson(rate x diurnal-load) dispatch opportunities; ``"full"``
+     deterministically offers a full cohort) bounded by free buffer slots
+     and ``s_dispatch``.
+  2. **Dispatch** — the server polls ``n_req`` candidates (excluding
+     clients already in flight), scores them with the *same* bandit policy
+     machinery as the sync engines (core.bandit_jax select fns over the
+     legacy full-[K] Eq. 8 draw), and admits the top picks into free slots,
+     stamping each with its absolute completion time ``now + finish_i``
+     from the realized schedule (core.bandit_jax.schedule_completions).
+  3. **Clock** — advances by the dispatch schedule's round time
+     (``tick_dt=None``, the sync-compatible pacing) or a fixed ``tick_dt``.
+  4. **Completion / aggregation** — of the updates whose completion time
+     has passed, the first ``buffer_size`` (slot order) aggregate
+     FedBuff-style; their realized (t_UD, t_UL, T_inc) feed
+     ``core.bandit_jax.observe`` — the bandit learns from completions
+     exactly as in the sync path, just later.  Updates whose *staleness*
+     (ticks since dispatch) exceeds ``max_staleness`` are dropped and
+     counted instead — whether completed or still in flight.
+
+Degenerate reduction: with ``arrival="full"``, instant completions
+(schedule-paced clock, so every dispatched update completes within its own
+tick), ``buffer_size == s_dispatch == s_round`` and a large
+``max_staleness``, every tick collapses to exactly one synchronous round —
+selections, round times and the bandit state are **bitwise identical** to
+``sim.engine_jax.sweep(fast_sampling=False)`` (jit-vs-jit, PR 4's parity
+convention), because the tick consumes the identical per-round key streams.
+tests/test_async_engine.py pins this, plus the staleness/conservation/
+monotonicity invariants, property-based.
+
+Resumability: all randomness derives from ``split(PRNGKey(seed),
+total_ticks)`` per-tick keys indexed by *absolute* tick, so a run can stop
+at any tick, snapshot (``snapshot_tree``), restore, and continue
+bit-identically — the crash/resume contract ``launch/serve_fl.py`` builds
+on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bandit_jax
+from repro.sim import engine_jax
+from repro.sim.resources import PAPER_MODEL_BITS
+from repro.sim.scenarios import Scenario, get_scenario
+
+# The arrival stream cannot join the six shared per-tick streams (cand,
+# theta, gamma, pol, cong, churn) without changing their root split — which
+# would break the bitwise degenerate reduction to the sync sweep — so it
+# folds a fixed tag into the seed key instead.
+_ARRIVAL_STREAM_TAG = 0xA51C
+_PERM_STREAM_TAG = 0xA51D       # FL twin's client-shuffle stream
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    """Static knobs of the async serving loop (hashable: jit-static).
+
+    ``n_slots`` bounds the in-flight population; ``buffer_size`` is the
+    FedBuff aggregation batch per tick; ``max_staleness`` (in ticks) evicts
+    updates — completed or not — whose base model is too old;
+    ``s_dispatch`` bounds the per-tick cohort; ``n_req`` is the per-tick
+    Resource Request poll size.  ``tick_dt=None`` paces the clock by each
+    tick's realized dispatch schedule (``idle_dt`` when nothing
+    dispatches); a float fixes the tick length.  ``arrival`` is
+    ``"poisson"`` (rate ``arrival_rate``, modulated by the scenario's
+    diurnal load curve) or ``"full"`` (a full cohort is always available —
+    the degenerate sync-reduction mode).  ``staleness_power`` shapes the
+    FedBuff aggregation weight ``(1 + staleness)**-p`` consumed by the
+    learning-coupled twin (fl/engine.async_accuracy_run); the time-only
+    engine only counts.
+    """
+
+    n_slots: int = 32
+    buffer_size: int = 5
+    max_staleness: int = 50
+    s_dispatch: int = 5
+    n_req: int = 10
+    tick_dt: float | None = None
+    idle_dt: float = 1.0
+    arrival: str = "poisson"
+    arrival_rate: float = 5.0
+    staleness_power: float = 0.5
+
+    def __post_init__(self):
+        if self.n_slots < self.s_dispatch:
+            raise ValueError(f"n_slots={self.n_slots} < "
+                             f"s_dispatch={self.s_dispatch}: a full cohort "
+                             "must fit in the buffer")
+        if self.buffer_size < 1:
+            raise ValueError("buffer_size must be >= 1")
+        if self.max_staleness < 0:
+            raise ValueError("max_staleness must be >= 0")
+        if self.tick_dt is not None and not self.tick_dt > 0.0:
+            raise ValueError("tick_dt must be positive (or None)")
+        if not self.idle_dt > 0.0:
+            raise ValueError("idle_dt must be positive (elapsed time is "
+                             "strictly monotone)")
+        if self.arrival not in ("poisson", "full"):
+            raise ValueError(f"unknown arrival process {self.arrival!r}")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class AsyncState:
+    """Everything the serving loop carries across ticks (a checkpointable
+    pytree: see :func:`snapshot_tree`).
+
+    Buffer slots with ``buf_client < 0`` are free; occupied slots hold the
+    dispatched client, its absolute completion time, its dispatch tick
+    (staleness base) and the realized (t_UD, t_UL, T_inc) the bandit will
+    observe at aggregation.
+    """
+
+    bandit: bandit_jax.BanditState
+    buf_client: jnp.ndarray     # [B] int32, -1 = free
+    buf_done: jnp.ndarray       # [B] f32 absolute completion time
+    buf_tick: jnp.ndarray       # [B] int32 dispatch tick
+    buf_ud: jnp.ndarray         # [B] f32 realized t_UD
+    buf_ul: jnp.ndarray         # [B] f32 realized t_UL
+    buf_inc: jnp.ndarray        # [B] f32 realized T_inc observation
+    mean_theta: jnp.ndarray     # [K] f32 churn-evolving mean throughput
+    mean_gamma: jnp.ndarray     # [K] f32 churn-evolving mean capability
+    now: jnp.ndarray            # [] f32 server clock
+    tick: jnp.ndarray           # [] int32 next tick index (0-based)
+    n_admitted: jnp.ndarray     # [] int32 cumulative dispatched updates
+    n_aggregated: jnp.ndarray   # [] int32 cumulative aggregated updates
+    n_dropped: jnp.ndarray      # [] int32 cumulative over-stale evictions
+
+    @staticmethod
+    def create(env: engine_jax.EnvArrays, cfg: AsyncConfig) -> "AsyncState":
+        k = env.mean_theta.shape[0]
+        b = cfg.n_slots
+        zf = lambda: jnp.zeros(b, jnp.float32)
+        return AsyncState(
+            bandit=bandit_jax.BanditState.create(k),
+            buf_client=jnp.full(b, -1, jnp.int32),
+            buf_done=zf(), buf_tick=jnp.zeros(b, jnp.int32),
+            buf_ud=zf(), buf_ul=zf(), buf_inc=zf(),
+            mean_theta=env.mean_theta, mean_gamma=env.mean_gamma,
+            now=jnp.float32(0), tick=jnp.int32(0),
+            n_admitted=jnp.int32(0), n_aggregated=jnp.int32(0),
+            n_dropped=jnp.int32(0))
+
+    def replace(self, **kw) -> "AsyncState":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# The two tick phases, as pure helpers so the learning-coupled twin
+# (fl/engine.async_accuracy_run) runs the identical buffer bookkeeping.
+# ---------------------------------------------------------------------------
+
+def dispatch_plan(state: AsyncState, cand_mask: jnp.ndarray,
+                  k_pol: jnp.ndarray, t_ud: jnp.ndarray, t_ul: jnp.ndarray,
+                  n_arrivals: jnp.ndarray, hyper, select_fn,
+                  cfg: AsyncConfig):
+    """Phase 1 of a tick: poll, select, and plan the cohort's admission.
+
+    ``cand_mask``: this tick's raw [K] Resource-Request poll;
+    ``n_arrivals``: how many dispatch opportunities the arrival process
+    offers.  Clients already in flight are excluded from the poll (a device
+    cannot train two updates at once; in the degenerate sync reduction the
+    buffer is empty at dispatch, so the exclusion is a no-op and parity is
+    preserved).  Returns ``(sel, target, finish, rt, incs, n_disp)`` —
+    the truncated [s_dispatch] selection (-1 padded), each member's buffer
+    slot (``n_slots`` = dropped), its completion offset from ``now``, the
+    cohort's realized round time and per-slot T_inc observations.
+    """
+    k = t_ud.shape[0]
+    occ = jnp.where(state.buf_client >= 0, state.buf_client, k)
+    inflight = jnp.zeros(k, bool).at[occ].set(True, mode="drop")
+    cand_mask = cand_mask & ~inflight
+
+    sel = select_fn(state.bandit, cand_mask, k_pol, t_ud, t_ul, hyper)
+
+    free = state.buf_client < 0
+    n_disp = jnp.minimum(n_arrivals.astype(jnp.int32),
+                         jnp.minimum(free.sum().astype(jnp.int32),
+                                     cfg.s_dispatch))
+    sel = jnp.where(jnp.arange(cfg.s_dispatch) < n_disp, sel, -1)
+
+    valid = sel >= 0
+    safe = jnp.where(valid, sel, 0)
+    rt, incs, finish = bandit_jax.schedule_completions(
+        valid, t_ud[safe], t_ul[safe])
+
+    # cohort member i -> the i-th free slot (ascending); invalid members
+    # scatter out of bounds and drop
+    free_idx = jnp.nonzero(free, size=cfg.s_dispatch,
+                           fill_value=cfg.n_slots)[0].astype(jnp.int32)
+    target = jnp.where(valid, free_idx, cfg.n_slots)
+    return sel, target, finish, rt, incs, n_disp
+
+
+def admit(state: AsyncState, sel, target, finish, incs, t_ud, t_ul
+          ) -> AsyncState:
+    """Scatter the planned cohort into its buffer slots (phase 1b)."""
+    valid = sel >= 0
+    safe = jnp.where(valid, sel, 0)
+    return state.replace(
+        buf_client=state.buf_client.at[target].set(sel, mode="drop"),
+        buf_done=state.buf_done.at[target].set(state.now + finish,
+                                               mode="drop"),
+        buf_tick=state.buf_tick.at[target].set(state.tick, mode="drop"),
+        buf_ud=state.buf_ud.at[target].set(t_ud[safe], mode="drop"),
+        buf_ul=state.buf_ul.at[target].set(t_ul[safe], mode="drop"),
+        buf_inc=state.buf_inc.at[target].set(incs, mode="drop"),
+        n_admitted=state.n_admitted + valid.sum().astype(jnp.int32))
+
+
+def completion_plan(state: AsyncState, now: jnp.ndarray,
+                    cfg: AsyncConfig):
+    """Phase 2 of a tick: decide which slots aggregate, drop, or wait.
+
+    ``now`` is the post-advance clock.  Staleness of a slot is
+    ``tick - buf_tick`` (same-tick dispatch = 0).  Over-stale slots —
+    completed or still in flight — are evicted (dropped); of the remaining
+    completed slots the first ``buffer_size`` in slot order aggregate.
+    Returns ``(agg_slots [buffer_size] (-1 padded in client terms via
+    fill=n_slots), agg_mask [B], drop_mask [B], staleness [B])``.
+    """
+    occupied = state.buf_client >= 0
+    staleness = state.tick - state.buf_tick
+    drop_mask = occupied & (staleness > cfg.max_staleness)
+    ready = occupied & (state.buf_done <= now) & ~drop_mask
+    rank = jnp.cumsum(ready.astype(jnp.int32)) - 1
+    agg_mask = ready & (rank < cfg.buffer_size)
+    agg_slots = jnp.nonzero(agg_mask, size=cfg.buffer_size,
+                            fill_value=cfg.n_slots)[0].astype(jnp.int32)
+    return agg_slots, agg_mask, drop_mask, staleness
+
+
+def gather_aggregated(state: AsyncState, agg_slots: jnp.ndarray,
+                      cfg: AsyncConfig):
+    """Gather the aggregating slots' observations (fill slots -> idx -1,
+    which :func:`core.bandit_jax.observe` drops)."""
+    in_range = agg_slots < cfg.n_slots
+    safe = jnp.where(in_range, agg_slots, 0)
+    idx = jnp.where(in_range, state.buf_client[safe], -1)
+    return (idx, state.buf_ud[safe], state.buf_ul[safe],
+            state.buf_inc[safe])
+
+
+def staleness_weights(staleness: jnp.ndarray, power: float) -> jnp.ndarray:
+    """FedBuff-style staleness discount ``(1 + s)**-power`` (s in ticks).
+    The learning-coupled twin multiplies this into the per-client FedAvg
+    weight; ``power=0`` recovers plain data-weighted averaging."""
+    s = jnp.maximum(staleness.astype(jnp.float32), 0.0)
+    return (1.0 + s) ** jnp.float32(-power)
+
+
+def poll_inputs(scen: Scenario, env: engine_jax.EnvArrays,
+                cfg: AsyncConfig, state: AsyncState, kk, *,
+                eta, model_bits, fluctuate: bool):
+    """One tick's environment draws: Eq. (8) realized times under the
+    scenario's throughput multiplier, the Resource-Request candidate poll,
+    and the arrival process's dispatch-opportunity count.  ``kk`` is the
+    tick's key dict (:func:`tick_keys` row).  Shared verbatim by the
+    time-only tick below and the learning-coupled twin
+    (fl/engine.async_accuracy_run), so both consume the identical random
+    streams.  Returns ``(t_ud [K], t_ul [K], cand_mask [K], n_arrivals)``.
+    """
+    k = env.mean_theta.shape[0]
+    rnd = (state.tick + 1)[None]                         # 1-based, like sync
+    mult = engine_jax.scenario_thr_mult(scen, env.cell_id,
+                                        kk["cong"][None], rnd)[0]
+    t_ud, t_ul = engine_jax.sample_times(
+        env.n_samples, state.mean_theta * mult, state.mean_gamma,
+        eta, model_bits, kk["theta"], kk["gamma"], fluctuate=fluctuate)
+    cand_mask = engine_jax._cand_masks_from_keys(
+        kk["cand"][None], k, cfg.n_req)[0]
+    if cfg.arrival == "full":
+        n_arr = jnp.int32(cfg.s_dispatch)
+    else:
+        lam = cfg.arrival_rate * engine_jax.scenario_diurnal_mult(
+            scen, rnd)[0]
+        n_arr = jax.random.poisson(kk["arr"], lam).astype(jnp.int32)
+    return t_ud, t_ul, cand_mask, n_arr
+
+
+def advance_clock(state: AsyncState, sel: jnp.ndarray, rt: jnp.ndarray,
+                  cfg: AsyncConfig) -> jnp.ndarray:
+    """The tick's clock step ``dt``: the dispatch schedule's realized round
+    time under schedule pacing (``tick_dt=None``; ``idle_dt`` when nothing
+    dispatched), else the fixed ``tick_dt``."""
+    if cfg.tick_dt is not None:
+        return jnp.float32(cfg.tick_dt)
+    return jnp.where((sel >= 0).any(), rt, jnp.float32(cfg.idle_dt))
+
+
+def _tick_fn(scen: Scenario, env: engine_jax.EnvArrays, cfg: AsyncConfig,
+             *, policy: str, eta, model_bits, hyper, fluctuate: bool):
+    """Build the per-tick transition ``tick(state, kk) -> (state, trace)``.
+    ``kk`` is this tick's key dict (streams: cand/theta/gamma/pol/cong/
+    churn shared bit-for-bit with the sync engines, plus arr)."""
+    select_fn = bandit_jax.make_select_fn(policy, cfg.s_dispatch)
+    decay = bandit_jax.policy_decay(policy)
+
+    def tick(state: AsyncState, kk):
+        t_ud, t_ul, cand_mask, n_arr = poll_inputs(
+            scen, env, cfg, state, kk, eta=eta, model_bits=model_bits,
+            fluctuate=fluctuate)
+
+        sel, target, finish, rt, incs, _n_disp = dispatch_plan(
+            state, cand_mask, kk["pol"], t_ud, t_ul, n_arr, hyper,
+            select_fn, cfg)
+        state = admit(state, sel, target, finish, incs, t_ud, t_ul)
+
+        dt = advance_clock(state, sel, rt, cfg)
+        now = state.now + dt
+
+        agg_slots, agg_mask, drop_mask, staleness = completion_plan(
+            state, now, cfg)
+        idx, ud_o, ul_o, inc_o = gather_aggregated(state, agg_slots, cfg)
+        bandit = bandit_jax.observe(state.bandit, idx, ud_o, ul_o, inc_o,
+                                    decay=decay)
+
+        n_agg = agg_mask.sum().astype(jnp.int32)
+        n_drop = drop_mask.sum().astype(jnp.int32)
+        clear = agg_mask | drop_mask
+        buf_client = jnp.where(clear, -1, state.buf_client)
+        agg_staleness = jnp.where(agg_mask, staleness, -1)
+
+        mean_theta, mean_gamma = state.mean_theta, state.mean_gamma
+        if scen.churn_prob > 0.0:
+            mean_theta, mean_gamma = engine_jax.churn_step(
+                kk["churn"], mean_theta, mean_gamma, scen.churn_prob)
+
+        state = state.replace(
+            bandit=bandit, buf_client=buf_client,
+            mean_theta=mean_theta, mean_gamma=mean_gamma,
+            now=now, tick=state.tick + 1,
+            n_aggregated=state.n_aggregated + n_agg,
+            n_dropped=state.n_dropped + n_drop)
+        trace = {
+            "dt": dt, "now": now, "selected": sel,
+            "admitted": (sel >= 0).sum().astype(jnp.int32),
+            "aggregated": n_agg, "dropped": n_drop,
+            "buffered": (buf_client >= 0).sum().astype(jnp.int32),
+            "max_staleness": jnp.max(agg_staleness),
+        }
+        return state, trace
+
+    return tick
+
+
+def tick_keys(seed: int, total_ticks: int, t0: int, n: int, *,
+              perm: bool = False) -> dict:
+    """Per-tick PRNG keys for absolute ticks [t0, t0+n) of a
+    ``total_ticks``-long run.
+
+    The six shared streams are ``split(root_i, total_ticks)`` rows — the
+    exact streams the sync engines consume for a ``total_ticks``-round run
+    (the bitwise degenerate-reduction anchor), and a pure function of
+    (seed, absolute tick), which is what makes a snapshot/restore resume
+    bit-identical: no RNG state needs checkpointing beyond the seed and the
+    tick counter.
+    """
+    if not (0 <= t0 and t0 + n <= total_ticks):
+        raise ValueError(f"segment [{t0}, {t0 + n}) outside "
+                         f"total_ticks={total_ticks}")
+    roots = jax.random.split(jax.random.PRNGKey(seed), 6)
+    names = ("cand", "theta", "gamma", "pol", "cong", "churn")
+    keys = {nm: jax.random.split(r, total_ticks)[t0:t0 + n]
+            for nm, r in zip(names, roots)}
+    keys["arr"] = jax.random.split(
+        jax.random.fold_in(jax.random.PRNGKey(seed), _ARRIVAL_STREAM_TAG),
+        total_ticks)[t0:t0 + n]
+    if perm:                      # the FL twin's client-shuffle stream
+        keys["perm"] = jax.random.split(
+            jax.random.fold_in(jax.random.PRNGKey(seed), _PERM_STREAM_TAG),
+            total_ticks)[t0:t0 + n]
+    return keys
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncResult:
+    """Traces of a serving segment (host numpy, [T]-leading) + final state.
+
+    ``selected`` is [T, s_dispatch] (-1 padded); ``max_staleness`` is the
+    per-tick max staleness among *aggregated* updates (-1 when none
+    aggregated).  tests/test_async_engine.py drives its four invariants off
+    these traces.
+    """
+
+    dt: np.ndarray
+    elapsed: np.ndarray
+    selected: np.ndarray
+    admitted: np.ndarray
+    aggregated: np.ndarray
+    dropped: np.ndarray
+    buffered: np.ndarray
+    max_staleness: np.ndarray
+    state: AsyncState
+
+    def conserved(self) -> bool:
+        """admitted == aggregated + dropped + still-buffered, cumulatively
+        at every tick (invariant (b))."""
+        return bool(np.all(np.cumsum(self.admitted)
+                           == np.cumsum(self.aggregated)
+                           + np.cumsum(self.dropped) + self.buffered))
+
+
+def run_segment(state: AsyncState, keys: dict, scen: Scenario,
+                env: engine_jax.EnvArrays, cfg: AsyncConfig, *,
+                policy: str, eta, model_bits, hyper,
+                fluctuate: bool = True):
+    """Scan ``tick`` over a segment of per-tick keys (jit under the hood;
+    config/policy static).  Returns ``(state, traces)`` with traces still
+    on device — :func:`serve` wraps this with key slicing + numpy."""
+    tick = _tick_fn(scen, env, cfg, policy=policy, eta=eta,
+                    model_bits=model_bits, hyper=hyper,
+                    fluctuate=fluctuate)
+    return jax.lax.scan(tick, state, keys)
+
+
+_run_segment_jit = jax.jit(
+    run_segment,
+    static_argnames=("scen", "cfg", "policy", "fluctuate"))
+
+
+def serve(scenario: str | Scenario = "paper-baseline",
+          policy: str = "elementwise_ucb",
+          *, n_ticks: int = 200, total_ticks: int | None = None,
+          t0: int = 0, seed: int = 0, cfg: AsyncConfig | None = None,
+          n_clients: int = 100, env_seed: int = 0,
+          env: engine_jax.EnvArrays | None = None,
+          state: AsyncState | None = None, eta: float = 1.0,
+          model_bits: float = PAPER_MODEL_BITS, hyper: float | None = None,
+          fluctuate: bool = True) -> AsyncResult:
+    """Run (or resume) an async serving simulation for ``n_ticks`` ticks.
+
+    ``total_ticks`` (default ``t0 + n_ticks``) fixes the run's key
+    horizon; resuming from a snapshot means calling again with the *same*
+    seed/total_ticks and ``t0 = state.tick`` — the result is bitwise
+    identical to the uninterrupted run (pinned in
+    tests/test_async_engine.py).
+    """
+    scen = (get_scenario(scenario) if isinstance(scenario, str)
+            else scenario)
+    cfg = cfg or AsyncConfig()
+    if env is None:
+        env = engine_jax.EnvArrays.from_scenario(
+            scen, scen.build_env(n_clients, np.random.default_rng(env_seed)))
+    if hyper is None:
+        hyper = bandit_jax.DEFAULT_HYPERS[policy]
+    if total_ticks is None:
+        total_ticks = t0 + n_ticks
+    if state is None:
+        if t0 != 0:
+            raise ValueError("t0 != 0 requires a resumed state")
+        state = AsyncState.create(env, cfg)
+    keys = tick_keys(seed, total_ticks, t0, n_ticks)
+    state, tr = _run_segment_jit(
+        state, keys, scen, env, cfg, policy=policy,
+        eta=jnp.float32(eta), model_bits=jnp.float32(model_bits),
+        hyper=jnp.float32(hyper), fluctuate=fluctuate)
+    tr = jax.device_get(tr)
+    return AsyncResult(
+        dt=tr["dt"], elapsed=tr["now"], selected=tr["selected"],
+        admitted=tr["admitted"], aggregated=tr["aggregated"],
+        dropped=tr["dropped"], buffered=tr["buffered"],
+        max_staleness=tr["max_staleness"], state=state)
+
+
+# ---------------------------------------------------------------------------
+# Snapshots (checkpoint/ckpt.py-compatible plain-dict trees)
+# ---------------------------------------------------------------------------
+
+def snapshot_tree(state: AsyncState) -> dict:
+    """Flatten an :class:`AsyncState` to a plain dict-of-arrays pytree that
+    ``checkpoint.ckpt.CheckpointManager.save`` persists without pickling
+    any custom treedef."""
+    d = {f.name: getattr(state, f.name)
+         for f in dataclasses.fields(state) if f.name != "bandit"}
+    d["bandit"] = bandit_jax.state_tree(state.bandit)
+    return d
+
+
+def state_from_snapshot(tree: dict) -> AsyncState:
+    """Inverse of :func:`snapshot_tree`."""
+    kw = {k: jnp.asarray(v) for k, v in tree.items() if k != "bandit"}
+    kw["bandit"] = bandit_jax.state_from_tree(tree["bandit"])
+    return AsyncState(**kw)

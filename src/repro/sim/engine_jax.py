@@ -328,6 +328,21 @@ def sample_times_candidates(key: jnp.ndarray, cand_idx: jnp.ndarray,
                                fluctuate=fluctuate)
 
 
+def scenario_diurnal_mult(scen: Scenario, rounds: jnp.ndarray) -> jnp.ndarray:
+    """[R'] per-round diurnal throughput multiplier (jnp twin of
+    ``Scenario.diurnal_multiplier``; 1.0 when the scenario has no diurnal
+    drift).  ``rounds``: [R'] 1-based round indices.  Shared by
+    :func:`scenario_thr_mult` and the async serving engine's arrival-rate
+    modulation (sim/async_engine.py) — load follows the same day cycle as
+    throughput."""
+    rounds = rounds.astype(jnp.float32)
+    if scen.diurnal_amp > 0.0 and scen.diurnal_period > 0:
+        return jnp.maximum(
+            1.0 + scen.diurnal_amp
+            * jnp.sin(2.0 * math.pi * rounds / scen.diurnal_period), 0.05)
+    return jnp.ones(rounds.shape, jnp.float32)
+
+
 def scenario_thr_mult(scen: Scenario, cell_id: jnp.ndarray,
                       keys: jnp.ndarray,
                       rounds: jnp.ndarray) -> jnp.ndarray:
@@ -342,13 +357,9 @@ def scenario_thr_mult(scen: Scenario, cell_id: jnp.ndarray,
     (fl/engine.py).
     """
     r = rounds.shape[0]
-    rounds = rounds.astype(jnp.float32)
     mult = jnp.ones((r, 1), jnp.float32)
     if scen.diurnal_amp > 0.0 and scen.diurnal_period > 0:
-        mult = mult * jnp.maximum(
-            1.0 + scen.diurnal_amp
-            * jnp.sin(2.0 * math.pi * rounds / scen.diurnal_period),
-            0.05)[:, None]
+        mult = mult * scenario_diurnal_mult(scen, rounds)[:, None]
     if scen.congestion_cells > 0 and scen.congestion_sigma > 0.0:
         cell_f = jnp.exp(scen.congestion_sigma * jax.vmap(
             lambda kk: jax.random.normal(kk, (scen.congestion_cells,)))(keys))

@@ -6,7 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint.ckpt import (CheckpointManager, bandit_state_tree,
+from repro.checkpoint.ckpt import (CheckpointManager, bandit_jax_state_tree,
+                                   bandit_state_tree,
+                                   restore_bandit_jax_state,
                                    restore_bandit_state)
 from repro.core.bandit import ClientStats
 
@@ -91,3 +93,35 @@ def test_bandit_state_survives(tmp_path):
     np.testing.assert_allclose(fresh.hist_ud, stats.hist_ud)
     # restored bandit produces identical UCB bonuses => identical policy
     np.testing.assert_allclose(fresh.ucb_bonus(), stats.ucb_bonus())
+
+
+def test_bandit_jax_state_survives_with_disc_fields(tmp_path):
+    """The on-device BanditState round-trips EVERY field bitwise — in
+    particular the ``disc_*`` discounted statistics that only exist on the
+    jax twin (a restart of a discounted_ucb serving run must not reset its
+    non-stationary exploration)."""
+    import dataclasses
+
+    from repro.core import bandit_jax
+
+    state = bandit_jax.BanditState.create(6)
+    rng = np.random.default_rng(3)
+    for _ in range(5):
+        idx = jnp.asarray(rng.integers(0, 6, 3), jnp.int32)
+        ud = jnp.asarray(rng.uniform(1, 10, 3), jnp.float32)
+        ul = jnp.asarray(rng.uniform(1, 10, 3), jnp.float32)
+        # traced decay < 1 so the disc_* scatters actually run
+        state = bandit_jax.observe(state, idx, ud, ul, ud + ul,
+                                   decay=jnp.float32(0.9))
+    assert float(state.disc_total) > 0          # there is something to lose
+
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(4, {"bandit": bandit_jax_state_tree(state)})
+    _, got = mgr.restore()
+    restored = restore_bandit_jax_state(got["bandit"])
+
+    for f in dataclasses.fields(bandit_jax.BanditState):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(restored, f.name)),
+            np.asarray(getattr(state, f.name)),
+            err_msg=f"BanditState field {f.name} lost in round-trip")
