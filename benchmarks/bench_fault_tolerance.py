@@ -1,0 +1,213 @@
+"""Fault-tolerance benchmark + the failure-aware correctness gates.
+
+The robustness PR added fault injection (sim/scenarios.FaultModel), round
+deadlines with censored bandit feedback and a guarded aggregation path.
+This bench measures what the paper's MAB selection buys under failures —
+a 10% per-dispatch crash rate plus a finite round deadline — and doubles
+as the CI gate for the subsystem.  The run FAILS if
+
+  * the bitwise reduction gate breaks: ``fault_prob=0`` with a generous
+    deadline must reproduce today's fault-free ``sweep()`` (all 8
+    policies, fused / unfused / chunked) and async ``serve()`` outputs
+    exactly, or
+  * a non-finite value reaches the global model under a corrupt-heavy
+    scenario (the aggregation guard's end-to-end contract), or
+  * MAB selection loses to ``random`` on median elapsed time-to-accuracy
+    under the benched crash+deadline scenario — the paper's core claim,
+    which censored feedback must preserve.
+
+Results land in ``BENCH_fault_tolerance.json`` at the repo root.
+
+  PYTHONPATH=src python benchmarks/bench_fault_tolerance.py [--fast]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+CRASH10 = dict(crash_prob=0.10)
+# realized paper-scale round times are ~500-3300 s (model_bits =
+# PAPER_MODEL_BITS); 2500 s censors the slow tail without starving rounds
+DEADLINE = 2500.0
+
+
+def check_reduction(fast: bool) -> list[str]:
+    """fault=0 + generous deadline == today's outputs, bitwise."""
+    import numpy as np
+
+    from repro.sim import async_engine, engine_jax
+
+    failures = []
+    kw = dict(etas=(1.5,), seeds=2, n_rounds=10, n_clients=24, s_round=4,
+              frac_request=0.5)
+    base = engine_jax.sweep(**kw)
+    for label, extra in (("fused", {}), ("unfused", {"fused": False}),
+                         ("chunked", {"chunk_rounds": 5})):
+        got = engine_jax.sweep(deadline=1e12, **kw, **extra)
+        if not np.array_equal(base.round_times, got.round_times):
+            failures.append(f"reduction: {label} sweep round times diverge")
+        if not (np.asarray(got.flags)[np.asarray(got.flags) >= 0] == 0).all():
+            failures.append(f"reduction: {label} sweep has non-OK flags")
+
+    a = async_engine.serve(n_ticks=25, seed=3)
+    b = async_engine.serve(n_ticks=25, seed=3,
+                           cfg=async_engine.AsyncConfig(deadline=1e12))
+    if not (np.array_equal(a.selected, b.selected)
+            and np.array_equal(a.dt, b.dt)
+            and int(b.state.n_failed) == 0):
+        failures.append("reduction: async serve diverges at generous "
+                        "deadline")
+    return failures
+
+
+def check_guard(fast: bool) -> list[str]:
+    """Corrupt-heavy accuracy run: the global model must stay finite."""
+    import numpy as np
+
+    from repro.fl import engine
+    from repro.models import cnn
+    from repro.sim.scenarios import FaultModel, Scenario
+
+    cfg = cnn.CnnConfig(image_size=8, channels=(8, 8), pool_after=(0,),
+                        fc_units=(16,), batchnorm=False)
+    scen = Scenario("corrupt-heavy", fault=FaultModel(crash_prob=0.1,
+                                                      corrupt_prob=0.5))
+    res = engine.accuracy_sweep(
+        scen, policies=("elementwise_ucb",), seeds=1, n_rounds=3,
+        n_clients=10, s_round=3, frac_request=0.5, cfg=cfg, epochs=1,
+        batch_size=10, deadline=50_000.0, n_train=400, n_test=200,
+        eval_batch=200, max_samples=40)
+    failures = []
+    if not np.isfinite(res.accuracy).all():
+        failures.append("guard: non-finite accuracy under corrupt uploads")
+    if res.fault_counts()["corrupt"].sum() == 0:
+        failures.append("guard: corrupt scenario produced no corrupt slots")
+    return failures
+
+
+def bench_elapsed(fast: bool, results: dict) -> tuple[list[str], list[str]]:
+    """Median elapsed time under 10% crash + deadline, MAB vs random
+    (time-only engine, paper-scale round model)."""
+    import numpy as np
+
+    from repro.sim import engine_jax
+    from repro.sim.scenarios import FaultModel, Scenario
+
+    scen = Scenario("crash10", fault=FaultModel(**CRASH10))
+    pols = ("elementwise_ucb", "naive_ucb", "fedcs", "random")
+    # keep the candidate pool well above s_round (15 of 50 / 10 of 100) —
+    # at frac_request * n_clients == s_round selection is forced and every
+    # policy degenerates to the same choice
+    res = engine_jax.sweep(
+        scen, policies=pols, etas=(1.5,), seeds=2 if fast else 8,
+        n_rounds=100 if fast else 500, n_clients=50 if fast else 100,
+        s_round=5, frac_request=0.3 if fast else 0.1, deadline=DEADLINE)
+    elapsed = res.round_times.sum(axis=-1)          # [P, 1, S]
+    med = np.median(elapsed.reshape(len(pols), -1), axis=1)
+    fc = res.fault_counts()
+    lines, failures = [], []
+    for i, p in enumerate(pols):
+        n_disp = fc["dispatched"].reshape(len(pols), -1)[i].sum()
+        missed = fc["deadline_missed"].reshape(len(pols), -1)[i].sum()
+        results["elapsed"][p] = {
+            "median_total_s": round(float(med[i]), 1),
+            "deadline_miss_rate": round(float(missed / n_disp), 4),
+            "crash_rate": round(float(
+                fc["crashed"].reshape(len(pols), -1)[i].sum() / n_disp), 4)}
+        lines.append(f"fault_tolerance/elapsed_{p},,"
+                     f"{med[i]:.0f}s median (miss="
+                     f"{results['elapsed'][p]['deadline_miss_rate']:.1%})")
+    if med[:3].min() >= med[3]:
+        failures.append(
+            f"elapsed: no MAB policy beats random under crash+deadline "
+            f"(MAB best {med[:3].min():.0f}s vs random {med[3]:.0f}s)")
+    return failures, lines
+
+
+def bench_time_to_accuracy(fast: bool, results: dict) \
+        -> tuple[list[str], list[str]]:
+    """Median elapsed time-to-accuracy under 10% crash + deadline,
+    learning-coupled (tiny CNN; paper-scale upload times so the deadline
+    actually censors the slow tail)."""
+    import numpy as np
+
+    from repro.fl import engine
+    from repro.models import cnn
+    from repro.sim.engine_jax import PAPER_MODEL_BITS
+    from repro.sim.scenarios import FaultModel, Scenario
+
+    cfg = cnn.CnnConfig(image_size=8, channels=(8, 8), pool_after=(0,),
+                        fc_units=(16,), batchnorm=False)
+    scen = Scenario("crash10", fault=FaultModel(**CRASH10))
+    pols = ("elementwise_ucb", "naive_ucb", "random")
+    # >= ~25 rounds: the UCB exploration bonus dominates the first pass
+    # over the client pool, so shorter runs can't show a learning effect
+    res = engine.accuracy_sweep(
+        scen, policies=pols, seeds=2 if fast else 4,
+        n_rounds=25 if fast else 40, n_clients=20, s_round=4,
+        frac_request=0.5, cfg=cfg, epochs=1, batch_size=10,
+        model_bits=PAPER_MODEL_BITS, deadline=DEADLINE,
+        n_train=800, n_test=400, eval_batch=400, max_samples=40)
+    acc = res.accuracy                              # [P, S, R]
+    elapsed = np.cumsum(res.round_times, axis=-1)   # [P, S, R]
+    # target: the weakest policy's median final accuracy — every policy
+    # reaches it, so time-to-accuracy is finite and comparable
+    target = float(np.median(acc[:, :, -1], axis=1).min())
+    reach = acc >= target
+    first = np.where(reach.any(axis=-1), reach.argmax(axis=-1),
+                     acc.shape[-1] - 1)
+    t2a = np.take_along_axis(elapsed, first[..., None], axis=-1)[..., 0]
+    med = np.median(t2a, axis=1)
+    failures, lines = [], []
+    for i, p in enumerate(pols):
+        results["time_to_accuracy"][p] = {
+            "median_s": round(float(med[i]), 1),
+            "median_final_acc": round(float(np.median(acc[i, :, -1])), 4)}
+        lines.append(f"fault_tolerance/t2a_{p},,{med[i]:.0f}s to "
+                     f"acc>={target:.3f}")
+    results["time_to_accuracy"]["target_acc"] = round(target, 4)
+    if not np.isfinite(acc).all():
+        failures.append("t2a: non-finite accuracy in crash+deadline run")
+    if med[:2].min() > med[2]:
+        failures.append(
+            f"t2a: no MAB policy beats random on median elapsed "
+            f"time-to-accuracy (MAB best {med[:2].min():.0f}s vs random "
+            f"{med[2]:.0f}s)")
+    return failures, lines
+
+
+def main(fast: bool = False) -> list[str]:
+    out = ["name,us_per_call,derived"]
+    results: dict = {"elapsed": {}, "time_to_accuracy": {}}
+
+    failures = check_reduction(fast)
+    out.append("fault_tolerance/reduction,,"
+               f"{'OK (fault-off bitwise, sweep+async)' if not failures else failures}")
+    g = check_guard(fast)
+    failures += g
+    out.append("fault_tolerance/guard,,"
+               f"{'OK (global model finite under corrupt uploads)' if not g else g}")
+
+    e_fail, e_lines = bench_elapsed(fast, results)
+    failures += e_fail
+    out += e_lines
+    t_fail, t_lines = bench_time_to_accuracy(fast, results)
+    failures += t_fail
+    out += t_lines
+
+    results["parity_failures"] = failures
+    (ROOT / "BENCH_fault_tolerance.json").write_text(
+        json.dumps(results, indent=2, sort_keys=True) + "\n")
+    if failures:
+        raise AssertionError("fault tolerance gate failed: "
+                             + "; ".join(failures))
+    return out
+
+
+if __name__ == "__main__":
+    for line in main(fast="--fast" in sys.argv):
+        print(line)

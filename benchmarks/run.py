@@ -13,6 +13,9 @@ benches.  Prints ``name,us_per_call,derived`` CSV lines.
             paths (BENCH_e2e_sweep.json)
   async_serve — bounded-staleness serving engine throughput, with bitwise
             sync-reduction and crash/resume gates (BENCH_async_serve.json)
+  fault_tolerance — MAB vs random under 10% crash + round deadline, with
+            the fault-off bitwise reduction and aggregation-guard gates
+            (BENCH_fault_tolerance.json)
   roofline— per (arch x shape) roofline terms from the dry-run artifacts
   scale   — selection-at-scale: vectorized UCB scoring for 1e6 arms
   fl_engine — learning-coupled engine vs the classic host training loop
@@ -52,7 +55,8 @@ def main() -> None:
 
     from benchmarks import (bench_accuracy, bench_async_serve,
                             bench_convergence, bench_drift, bench_e2e_sweep,
-                            bench_fl_engine, bench_kernels, bench_roofline,
+                            bench_fault_tolerance, bench_fl_engine,
+                            bench_kernels, bench_roofline,
                             bench_round_kernel, bench_scale,
                             bench_selection, bench_sharded_sweep,
                             bench_sweep)
@@ -65,6 +69,7 @@ def main() -> None:
         "round_kernel": bench_round_kernel.main,
         "e2e_sweep": bench_e2e_sweep.main,
         "async_serve": bench_async_serve.main,
+        "fault_tolerance": bench_fault_tolerance.main,
         "roofline": bench_roofline.main,
         "scale": bench_scale.main,
         "sweep": bench_sweep.main,

@@ -5,21 +5,45 @@ optimizer state, *bandit state* (the MAB scheduler must survive restarts —
 losing it would reset exploration), RNG state and the data cursor.
 
 Format: one .npz of flattened leaves + a JSON manifest (treedef, step,
-metadata).  Writes go to a temp dir then os.replace (atomic on POSIX), so a
-crash mid-save never corrupts the latest checkpoint.  Retention:
-``keep_last`` newest + every ``keep_every``-th for history.
+metadata).  Writes go to a temp dir, every file is fsynced, then os.replace
+(atomic on POSIX) publishes the directory and the parent is fsynced — a
+crash mid-save never corrupts the latest checkpoint, it just leaves an
+ignored ``.tmp_*`` directory.  The manifest records a SHA-256 per payload
+file; :meth:`CheckpointManager.restore` verifies them and falls back to the
+newest *valid* checkpoint when the latest is truncated or bit-rotted
+(e.g. a crash while the checkpoint directory itself was being damaged by
+an external actor — the failure mode the serve_fl restart smoke injects).
+Retention: ``keep_last`` newest + every ``keep_every``-th for history.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
+import warnings
 from pathlib import Path
 from typing import Any
 
 import jax
 import numpy as np
+
+
+def _sha256(path: Path) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def _fsync_file(path: Path) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 _WIDE_VIEW = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
@@ -87,18 +111,59 @@ class CheckpointManager:
         with open(tmp / "treedefs.pkl", "wb") as f:
             pickle.dump({k: jax.tree.structure(v) for k, v in state.items()},
                         f)
+        manifest["checksums"] = {
+            p.name: _sha256(p) for p in sorted(tmp.iterdir())
+            if p.name != "manifest.json"}
         (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        # durability before visibility: flush every payload byte to disk,
+        # atomically publish the directory, then persist the rename itself
+        for p in tmp.iterdir():
+            _fsync_file(p)
+        _fsync_file(tmp)
         final = self._path(step)
         if final.exists():
             shutil.rmtree(final)
         os.replace(tmp, final)
+        _fsync_file(self.dir)
         self._gc()
         return final
 
+    def is_valid(self, step: int) -> bool:
+        """True iff checkpoint ``step`` is structurally complete and every
+        payload file matches its manifest SHA-256 (pre-checksum legacy
+        checkpoints pass if their files are present and parseable)."""
+        path = self._path(step)
+        try:
+            manifest = json.loads((path / "manifest.json").read_text())
+            if int(manifest["step"]) != step:
+                return False
+            checksums = manifest.get("checksums")
+            if checksums is None:                      # legacy checkpoint
+                return all((path / f"{k}.npz").exists()
+                           for k in manifest["keys"])
+            return all((path / name).exists()
+                       and _sha256(path / name) == digest
+                       for name, digest in checksums.items())
+        except (OSError, ValueError, KeyError, json.JSONDecodeError):
+            return False
+
     def restore(self, step: int | None = None) -> tuple[int, dict[str, Any]]:
-        step = self.latest_step() if step is None else step
+        """Load a checkpoint.  With ``step=None``, walks newest -> oldest
+        and loads the first checkpoint whose checksums verify, warning
+        about any corrupt ones it skips — the crash-mid-checkpoint
+        recovery path."""
         if step is None:
-            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+            for cand in reversed(self.steps()):
+                if self.is_valid(cand):
+                    step = cand
+                    break
+                warnings.warn(f"skipping corrupt checkpoint ckpt_{cand:08d} "
+                              f"in {self.dir} (checksum/structure mismatch)")
+            if step is None:
+                raise FileNotFoundError(f"no valid checkpoints in {self.dir}")
+        elif not self.is_valid(step):
+            raise ValueError(f"checkpoint ckpt_{step:08d} in {self.dir} is "
+                             f"corrupt (checksum/structure mismatch)")
         path = self._path(step)
         manifest = json.loads((path / "manifest.json").read_text())
         import pickle
@@ -120,6 +185,13 @@ class CheckpointManager:
     def latest_step(self) -> int | None:
         s = self.steps()
         return s[-1] if s else None
+
+    def latest_valid_step(self) -> int | None:
+        """Newest step whose checkpoint verifies (None when none do)."""
+        for s in reversed(self.steps()):
+            if self.is_valid(s):
+                return s
+        return None
 
     def _gc(self) -> None:
         steps = self.steps()

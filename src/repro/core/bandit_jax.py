@@ -73,6 +73,7 @@ class BanditState:
     disc_ud: jnp.ndarray    # [K] f32  gamma-discounted sum of t_UD
     disc_ul: jnp.ndarray    # [K] f32  gamma-discounted sum of t_UL
     disc_total: jnp.ndarray  # [] f32  gamma-discounted Sigma N_k
+    n_fail: jnp.ndarray     # [K] int32  censored observations (failures)
 
     @staticmethod
     def create(k: int, window: int = HIST_WINDOW) -> "BanditState":
@@ -89,6 +90,7 @@ class BanditState:
             hist_n=jnp.zeros(k, jnp.int32),
             disc_n=z(), disc_ud=z(), disc_ul=z(),
             disc_total=jnp.zeros((), jnp.float32),
+            n_fail=jnp.zeros(k, jnp.int32),
         )
 
     @staticmethod
@@ -113,6 +115,7 @@ class BanditState:
             hist_n=jnp.asarray(stats.hist_n, jnp.int32),
             disc_n=z(), disc_ud=z(), disc_ul=z(),
             disc_total=jnp.zeros((), jnp.float32),
+            n_fail=jnp.zeros(k, jnp.int32),
         )
 
     def replace(self, **kw) -> "BanditState":
@@ -128,8 +131,16 @@ def state_tree(state: BanditState) -> dict:
 
 
 def state_from_tree(tree: dict) -> BanditState:
-    """Inverse of :func:`state_tree` (accepts numpy or jnp leaves)."""
-    return BanditState(**{k: jnp.asarray(v) for k, v in tree.items()})
+    """Inverse of :func:`state_tree` (accepts numpy or jnp leaves).
+
+    Checkpoints written before the failure-aware layer lack ``n_fail``;
+    restore them with a cold (all-zero) failure count rather than failing —
+    every other field must be present.
+    """
+    tree = {k: jnp.asarray(v) for k, v in tree.items()}
+    if "n_fail" not in tree:
+        tree["n_fail"] = jnp.zeros(tree["n_sel"].shape[0], jnp.int32)
+    return BanditState(**tree)
 
 
 def ucb_bonus_arrays(n_sel: jnp.ndarray, total: jnp.ndarray) -> jnp.ndarray:
@@ -149,7 +160,8 @@ def ucb_bonus(state: BanditState) -> jnp.ndarray:
 
 def observe(state: BanditState, idx: jnp.ndarray, t_ud: jnp.ndarray,
             t_ul: jnp.ndarray, tinc: jnp.ndarray,
-            decay: float | jnp.ndarray = 1.0) -> BanditState:
+            decay: float | jnp.ndarray = 1.0,
+            fail: jnp.ndarray | None = None) -> BanditState:
     """Batch reward update for the selected clients (idx: [S]).
 
     Entries with ``idx < 0`` (the -1 padding emitted by the select fns when
@@ -164,6 +176,16 @@ def observe(state: BanditState, idx: jnp.ndarray, t_ud: jnp.ndarray,
     where the policy is unrolled) skips the ``disc_*`` updates entirely —
     nothing reads them — so the stationary scans don't pay three extra
     [K] scatters per round; a traced decay (replay mode) always updates.
+
+    ``fail`` ([S] bool, optional) marks *censored* observations: slots whose
+    client crashed, churned mid-upload or missed the round deadline.  The
+    caller has already replaced their ``t_ud``/``t_ul``/``tinc`` with the
+    deadline (:func:`censor_slots`) — the deadline is a lower bound on the
+    unobserved realized time, so the failed arm's statistics still move in
+    the pessimistic direction instead of silently learning nothing — and
+    this function additionally counts them in ``n_fail``.  With
+    ``fail=None`` (every fault-free caller) the update compiles exactly as
+    before.
     """
     k = state.n_sel.shape[0]
     w = state.hist_ud.shape[1]
@@ -180,6 +202,10 @@ def observe(state: BanditState, idx: jnp.ndarray, t_ud: jnp.ndarray,
             disc_total=state.disc_total * decay
             + valid.sum(dtype=jnp.float32),
         )
+    if fail is not None:
+        fdrop = jnp.where(valid & fail, idx, k)
+        disc = dict(disc,
+                    n_fail=state.n_fail.at[fdrop].add(1, mode="drop"))
     return state.replace(
         n_sel=state.n_sel.at[safe].add(1, mode="drop"),
         sum_ud=state.sum_ud.at[safe].add(t_ud, mode="drop"),
@@ -355,6 +381,114 @@ def schedule_completions(valid: jnp.ndarray, ud: jnp.ndarray,
     _, incs = jax.lax.scan(ibody, (jnp.float32(0), jnp.float32(0)),
                            (ud, ul, valid))
     return round_time, incs, finish
+
+
+# ---------------------------------------------------------------------------
+# Failure-aware round layer: per-slot fault draws, deadline censoring and the
+# slot outcome flags, shared verbatim by the unfused mask pipeline
+# (round_via_mask), the compacted CPU reference (kernels/ref.py) and the
+# Pallas kernel body (kernels/bandit_round.py) — the one definition the
+# cross-path bitwise gates guard.
+# ---------------------------------------------------------------------------
+
+# per-slot outcome categories (mutually exclusive; crash wins over churn
+# wins over deadline wins over corrupt, so per-round counts partition the
+# dispatched set — the conservation invariant the property tests assert)
+FLAG_PAD = -1        # empty selection slot (sel == -1)
+FLAG_OK = 0          # completed in time, update aggregated
+FLAG_CRASH = 1       # crashed before upload (never arrived)
+FLAG_CHURN = 2       # left the network mid-upload (never arrived)
+FLAG_DEADLINE = 3    # healthy but finished past the round deadline
+FLAG_CORRUPT = 4     # arrived in time but the update payload is garbage
+
+# fold_in tag deriving the per-round fault stream from the per-round policy
+# key — a tagged child stream, so engines add fault draws without disturbing
+# any existing root split (the fault_prob=0 bitwise-reduction gate), and
+# chunked==unchunked holds for free (the policy key is already per-round)
+FAULT_STREAM_TAG = 0xFA11
+
+
+def fault_uniforms(key: jnp.ndarray, s_round: int) -> jnp.ndarray:
+    """The [3, S] per-slot fault uniforms for one round (rows: crash, churn,
+    corrupt) from that round's policy key.  Drawn OUTSIDE the fused kernels
+    and passed in, so all three round paths consume identical draws."""
+    return jax.random.uniform(jax.random.fold_in(key, FAULT_STREAM_TAG),
+                              (3, s_round), jnp.float32)
+
+
+def resolve_fault(fault, deadline: float | None):
+    """Normalize/validate the (fault, deadline) pair of a round factory.
+
+    ``fault`` may be a ``sim.scenarios.FaultModel`` (anything with a
+    ``.probs`` triple), a plain (crash, churn, corrupt) tuple, or None.
+    Returns the static probability triple, or None when fault injection is
+    off.  Fault injection without a finite deadline is rejected: the server
+    would wait forever for a crashed client (and the censored observation
+    needs the deadline as its lower bound).
+    """
+    probs = tuple(float(p) for p in getattr(fault, "probs", fault or ()))
+    if probs and len(probs) != 3:
+        raise ValueError(
+            f"fault must be a (crash, churn, corrupt) probability triple "
+            f"or a FaultModel, got {fault!r}")
+    if any(p < 0.0 or p > 1.0 for p in probs):
+        raise ValueError(f"fault probabilities must lie in [0, 1], "
+                         f"got {probs}")
+    if deadline is not None and not (float(deadline) > 0.0):
+        raise ValueError(f"deadline must be a positive round duration in "
+                         f"seconds (or None for no deadline), got {deadline}")
+    if not any(probs):
+        return None
+    if deadline is None:
+        raise ValueError(
+            "fault injection requires a finite round deadline: a crashed "
+            "client never uploads, so without a deadline the realized "
+            "schedule would wait on it forever — pass deadline=<T_max>")
+    return probs
+
+
+def censor_slots(valid, sud, sul, incs, finish, round_time, fault_u,
+                 fault: tuple[float, float, float] | None, deadline: float):
+    """Apply the failure layer to one round's per-slot schedule outcome.
+
+    Inputs are slot vectors ([S]): validity, gathered (t_UD, t_UL), Eq. (1)
+    increments, per-slot completion offsets (schedule_completions) and the
+    realized round time; ``fault_u`` is the [3, S] uniform block from
+    :func:`fault_uniforms` and ``fault`` the static (crash, churn, corrupt)
+    probability triple (None = deadline only).  Returns
+
+        (obs_ud, obs_ul, obs_inc, fail, flags, round_time)
+
+    where failed slots' observations are censored at the deadline (the
+    known lower bound on their unobserved realized time), ``fail`` marks
+    the crash/churn/deadline slots (corrupt uploads DID arrive in time —
+    their timing is a true observation; only their payload is rejected, at
+    the aggregation guard), ``flags`` is the per-slot FLAG_* category and
+    the round time becomes the full deadline whenever any dispatched
+    client failed — the server waits out T_max for the missing uploads
+    (FedCS round-deadline semantics; an all-failed round is a no-op that
+    still advances the clock by T_max).
+    """
+    dl = jnp.float32(deadline)
+    if fault is not None:
+        crash = fault_u[0] < jnp.float32(fault[0])
+        churn = fault_u[1] < jnp.float32(fault[1])
+        corrupt = fault_u[2] < jnp.float32(fault[2])
+    else:
+        crash = churn = corrupt = jnp.zeros(valid.shape, bool)
+    missed = finish > dl
+    fail = valid & (crash | churn | missed)
+    flags = jnp.where(
+        crash, FLAG_CRASH,
+        jnp.where(churn, FLAG_CHURN,
+                  jnp.where(missed, FLAG_DEADLINE,
+                            jnp.where(corrupt, FLAG_CORRUPT, FLAG_OK))))
+    flags = jnp.where(valid, flags, FLAG_PAD).astype(jnp.int32)
+    obs_ud = jnp.where(fail, dl, sud)
+    obs_ul = jnp.where(fail, dl, sul)
+    obs_inc = jnp.where(fail, dl, incs)
+    round_time = jnp.where(jnp.any(fail), dl, round_time)
+    return obs_ud, obs_ul, obs_inc, fail, flags, round_time
 
 
 # ---------------------------------------------------------------------------
@@ -610,10 +744,15 @@ def scatter_cand_times(cand_idx: jnp.ndarray, t_ud_c: jnp.ndarray,
 
 
 def round_via_mask(state, cand_mask, t_ud, t_ul, rand, hyper, *,
-                   policy: str, s_round: int, decay: float = 1.0):
+                   policy: str, s_round: int, decay: float = 1.0,
+                   fault: tuple | None = None, deadline: float | None = None,
+                   fault_u: jnp.ndarray | None = None):
     """One whole round through the UNfused mask pipeline (full-[K] select +
     schedule + observe) with the round contract of the fused paths:
-    returns ``(new_state, sel [S], round_time)``.
+    returns ``(new_state, sel [S], round_time)`` — plus a fourth ``flags``
+    [S] output (per-slot FLAG_* outcome) when the failure layer is on
+    (``deadline`` set; ``fault_u`` is the [3, S] block from
+    :func:`fault_uniforms`, None when only the deadline is active).
 
     This is the small-K fallback of ops.bandit_round (see
     :data:`FUSED_MIN_K`): ``rand`` is the [K] uniform stream the fused
@@ -623,10 +762,20 @@ def round_via_mask(state, cand_mask, t_ud, t_ul, rand, hyper, *,
     """
     sel = _select_with_rand(policy, state, cand_mask, t_ud, t_ul, rand,
                             hyper, s_round)
-    round_time, incs = schedule_selected(sel, t_ud, t_ul)
     safe = jnp.where(sel >= 0, sel, 0)
-    state = observe(state, sel, t_ud[safe], t_ul[safe], incs, decay=decay)
-    return state, sel, round_time
+    if deadline is None:
+        round_time, incs = schedule_selected(sel, t_ud, t_ul)
+        state = observe(state, sel, t_ud[safe], t_ul[safe], incs,
+                        decay=decay)
+        return state, sel, round_time
+    valid = sel >= 0
+    sud, sul = t_ud[safe], t_ul[safe]
+    round_time, incs, finish = schedule_completions(valid, sud, sul)
+    obs_ud, obs_ul, obs_inc, fail, flags, round_time = censor_slots(
+        valid, sud, sul, incs, finish, round_time, fault_u, fault, deadline)
+    state = observe(state, sel, obs_ud, obs_ul, obs_inc, decay=decay,
+                    fail=fail)
+    return state, sel, round_time, flags
 
 
 def make_select_fn(policy: str, s_round: int) -> Callable:
@@ -640,7 +789,8 @@ def make_select_fn(policy: str, s_round: int) -> Callable:
 
 def make_round_fn(policy: str, s_round: int, *,
                   use_kernel: bool | None = None,
-                  interpret: bool | None = None) -> Callable:
+                  interpret: bool | None = None,
+                  fault=None, deadline: float | None = None) -> Callable:
     """The fused fast path: one whole protocol round — policy scoring,
     candidate-compacted Algorithm-1 / top-S selection, realized schedule,
     and the ``observe`` statistics update — as a single call
@@ -663,10 +813,18 @@ def make_round_fn(policy: str, s_round: int, *,
     below the threshold so the fallback costs nothing.
     The per-round decay of the ``disc_*`` statistics is resolved statically
     from the policy, exactly as the engines do for the fallback.
+
+    With ``deadline`` set the failure-aware layer is compiled in (``fault``:
+    FaultModel / probability triple / None — see :func:`resolve_fault`):
+    the fault stream derives from ``key`` via :data:`FAULT_STREAM_TAG`, and
+    the round additionally returns the per-slot FLAG_* outcome —
+    ``(state, sel, round_time, flags)``.  Left at the defaults, nothing
+    about the round changes, bitwise.
     """
     if policy not in SELECT_FNS:
         raise ValueError(f"unknown policy {policy!r}; have {POLICY_NAMES}")
     decay = policy_decay(policy)
+    fault = resolve_fault(fault, deadline)
 
     def round_fn(state, cand_idx, key, t_ud, t_ul, hyper):
         from repro.kernels import ops
@@ -675,14 +833,18 @@ def make_round_fn(policy: str, s_round: int, *,
         # fused and fallback paths consume identical randomness
         rand = (jax.random.uniform(key, t_ud.shape)
                 if policy == "random" else None)
+        fu = (fault_uniforms(key, s_round)
+              if fault is not None else None)
         if use_kernel is None and k < fused_min_k(policy):
             mask = jnp.zeros(k, bool).at[cand_idx].set(True, mode="drop")
             return round_via_mask(state, mask, t_ud, t_ul, rand, hyper,
                                   policy=policy, s_round=s_round,
-                                  decay=decay)
+                                  decay=decay, fault=fault,
+                                  deadline=deadline, fault_u=fu)
         return ops.bandit_round(state, cand_idx, t_ud, t_ul, rand, hyper,
                                 policy=policy, s_round=s_round, decay=decay,
-                                use_kernel=use_kernel, interpret=interpret)
+                                use_kernel=use_kernel, interpret=interpret,
+                                fault=fault, deadline=deadline, fault_u=fu)
 
     return round_fn
 
@@ -690,7 +852,9 @@ def make_round_fn(policy: str, s_round: int, *,
 def make_sampled_round_fn(policy: str, s_round: int, *,
                           fluctuate: bool = True,
                           use_kernel: bool | None = None,
-                          interpret: bool | None = None) -> Callable:
+                          interpret: bool | None = None,
+                          fault=None,
+                          deadline: float | None = None) -> Callable:
     """The streamed-sampling fast path: one whole protocol round that draws
     its own Eq. (8) resource times AT THE CANDIDATE SLICE —
 
@@ -710,10 +874,15 @@ def make_sampled_round_fn(policy: str, s_round: int, *,
     The random policy still draws its [K] uniform stream from ``key`` so
     the fast path's fused and unfused executions stay bitwise-identical,
     like ``make_round_fn``'s.
+
+    ``fault``/``deadline`` compile in the failure-aware layer exactly as in
+    :func:`make_round_fn` (fourth ``flags`` output when ``deadline`` is
+    set; bitwise no-op at the defaults).
     """
     if policy not in SELECT_FNS:
         raise ValueError(f"unknown policy {policy!r}; have {POLICY_NAMES}")
     decay = policy_decay(policy)
+    fault = resolve_fault(fault, deadline)
 
     def round_fn(state, cand_idx, key, k_time, theta_mu, gamma_mu,
                  n_samples, eta, model_bits, hyper):
@@ -724,6 +893,8 @@ def make_sampled_round_fn(policy: str, s_round: int, *,
                 if policy == "random" else None)
         u2 = (jax.random.uniform(k_time, (2,) + cand_idx.shape, jnp.float32)
               if fluctuate else None)
+        fu = (fault_uniforms(key, s_round)
+              if fault is not None else None)
         if use_kernel is None and k < fused_min_k(policy):
             # small-K fallback (FUSED_MIN_K): same sliced draws, scattered
             # into zero-[K] buffers for the unfused mask pipeline
@@ -735,11 +906,13 @@ def make_sampled_round_fn(policy: str, s_round: int, *,
                                                   k)
             return round_via_mask(state, mask, t_ud, t_ul, rand, hyper,
                                   policy=policy, s_round=s_round,
-                                  decay=decay)
+                                  decay=decay, fault=fault,
+                                  deadline=deadline, fault_u=fu)
         return ops.bandit_round_sampled(
             state, cand_idx, u2, rand, theta_mu, gamma_mu, n_samples, eta,
             model_bits, hyper, policy=policy, s_round=s_round, decay=decay,
-            fluctuate=fluctuate, use_kernel=use_kernel, interpret=interpret)
+            fluctuate=fluctuate, use_kernel=use_kernel, interpret=interpret,
+            fault=fault, deadline=deadline, fault_u=fu)
 
     return round_fn
 

@@ -22,9 +22,23 @@ from repro.utils.trees import tree_param_count, tree_weighted_sum
 # below it the fixed pallas_call overhead dominates the single fused pass.
 KERNEL_MIN_PARAMS = 1 << 16
 
+# Aggregation guard: reject any client update whose flattened L2 norm
+# exceeds this (a diverged or corrupted local run — sane CNN updates here
+# are O(1e2)), in addition to any update containing non-finite values.
+GUARD_MAX_NORM = 1e8
+
+
+def update_ok(params: Any, max_norm: float = GUARD_MAX_NORM) -> bool:
+    """True iff a client update is safe to aggregate: every leaf finite and
+    the flattened L2 norm at most ``max_norm``.  The host-side twin of the
+    in-jit row guard in fl/engine._masked_fedavg."""
+    flat = jax.flatten_util.ravel_pytree(params)[0]
+    norm = jnp.sqrt(jnp.sum(jnp.square(flat.astype(jnp.float32))))
+    return bool(jnp.isfinite(flat).all()) and bool(norm <= max_norm)
+
 
 def fedavg(client_params: list[Any], weights: list[float],
-           use_kernel: bool | None = None) -> Any:
+           use_kernel: bool | None = None, guard: bool = False) -> Any:
     """Weighted average of client parameter pytrees.
 
     ``use_kernel`` routes the combine through the Pallas fedavg kernel; the
@@ -34,7 +48,24 @@ def fedavg(client_params: list[Any], weights: list[float],
     magnitude slower than the fused jnp path, so auto never picks it
     there).  Both paths compute the same result — asserted by
     tests/test_kernels.py::test_fedavg_routing_parity.
+
+    ``guard`` drops clients whose update fails :func:`update_ok` (non-finite
+    values or an exploding norm — a corrupted or diverged local run) before
+    averaging, so garbage can never reach the global model; the surviving
+    weights renormalize over the survivors (partial aggregation).  Raises
+    ValueError when *every* update is rejected — the caller decides what an
+    empty round means (the engines keep the previous global model).
     """
+    if guard:
+        kept = [(p, w) for p, w in zip(client_params, weights)
+                if update_ok(p)]
+        if not kept:
+            raise ValueError(
+                f"fedavg guard rejected all {len(client_params)} client "
+                f"updates (non-finite or norm-exploding) — keeping the "
+                f"previous global model is the caller's fallback")
+        client_params = [p for p, _ in kept]
+        weights = [w for _, w in kept]
     # f32 normalization, matching fl/engine.py's in-jit combine bit-for-bit
     # (x64 is unavailable on device, and counts are O(1e3) — exact in f32)
     w = np.asarray(weights, dtype=np.float32)

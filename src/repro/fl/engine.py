@@ -273,15 +273,38 @@ def _jitted_observe():
     return jax.jit(bandit_jax.observe)
 
 
-def _masked_fedavg(trained, weights: jnp.ndarray, use_kernel: bool):
+def _masked_fedavg(trained, weights: jnp.ndarray, use_kernel: bool,
+                   guard: bool = False):
     """Weighted FedAvg of stacked [C, ...] client trees.
 
     The selection mask arrives as zero weights, so unselected clients drop
     out of the average with no branching; with ``use_kernel`` the flattened
     combine is one Pallas ``fedavg`` pass (kernels/fedavg.py), otherwise a
     jnp accumulation computing the identical contraction.
+
+    ``guard`` (the failure-aware layer) rejects rows whose parameters are
+    non-finite or norm-exploding (``aggregation.GUARD_MAX_NORM``): their
+    weight is zeroed AND their values are replaced by zeros before the
+    combine — a NaN times a zero weight is still NaN, so masking the
+    weight alone would not stop propagation into the global model.
+    Returns ``(avg, w_guarded, n_rejected)`` with the guard on (the caller
+    needs the surviving weight mass to decide whether any update landed),
+    plain ``avg`` otherwise — the fault-free path compiles exactly as
+    before.
     """
+    from repro.fl.aggregation import GUARD_MAX_NORM
+
     flat = jax.vmap(lambda t: ravel_pytree(t)[0])(trained)     # [C, N]
+    n_rejected = None
+    if guard:
+        finite = jnp.isfinite(flat).all(axis=1)
+        # NaN norms compare False, but the explicit finite mask keeps the
+        # intent readable (and catches +-inf that squares to inf)
+        norm = jnp.sqrt(jnp.sum(jnp.square(flat), axis=1))
+        row_ok = finite & (norm <= GUARD_MAX_NORM)
+        n_rejected = ((weights > 0.0) & ~row_ok).sum().astype(jnp.int32)
+        weights = jnp.where(row_ok, weights, 0.0)
+        flat = jnp.where(row_ok[:, None], flat, 0.0)
     w = (weights / jnp.maximum(weights.sum(), 1e-9)).astype(flat.dtype)
     if use_kernel:
         from repro.kernels.ops import fedavg_combine
@@ -294,18 +317,36 @@ def _masked_fedavg(trained, weights: jnp.ndarray, use_kernel: bool):
         for i in range(1, flat.shape[0]):
             avg = avg + flat[i] * w[i]
     unravel = ravel_pytree(jax.tree.map(lambda l: l[0], trained))[1]
+    if guard:
+        return unravel(avg), weights, n_rejected
     return unravel(avg)
 
 
 def _train_round(params, sel, task: FlTask, lr, perm_key, *, client_update,
-                 cohort: str, use_kernel: bool):
+                 cohort: str, use_kernel: bool, flags=None):
     """One round of local training + masked aggregation.
 
     Per-client RNG is ``fold_in(perm_key, client_id)`` in both cohort
     layouts, which is what makes them bit-compatible: a client trains the
     same trajectory whether it ran inside the all-K vmap or a selected
-    slot."""
+    slot.
+
+    ``flags`` ([S] FLAG_* outcomes, failure-aware rounds only) splits the
+    dispatched cohort: crash/churn/deadline slots never arrive (weight 0 —
+    they trained for nothing), FLAG_CORRUPT slots arrive on time but emit
+    garbage — their delta is poisoned to NaN here and must be caught by
+    the aggregation guard, never by this routing, so the guard is
+    exercised end-to-end.  An all-failed round keeps the previous global
+    model (graceful degradation; the clock still advanced by T_max
+    upstream).  Returns ``(params, n_rejected)`` with flags, else params.
+    """
+    failure = flags is not None
     valid = sel >= 0
+    # arrived = the update reached the server in time (corrupt included —
+    # its payload is garbage but its arrival is real; the guard rejects it)
+    arrived = (valid & ((flags == bandit_jax.FLAG_OK)
+                        | (flags == bandit_jax.FLAG_CORRUPT))
+               if failure else valid)
     safe = jnp.where(valid, sel, 0)
     cnt = task.part_count.astype(jnp.float32)
     vm = jax.vmap(client_update, in_axes=(None, None, None, 0, 0, None, 0))
@@ -316,18 +357,38 @@ def _train_round(params, sel, task: FlTask, lr, perm_key, *, client_update,
         trained = vm(params, task.train_x, task.train_y, task.part_idx,
                      task.part_count, lr, keys)
         w = jnp.zeros(k, jnp.float32).at[safe].add(
-            jnp.where(valid, cnt[safe], 0.0))
+            jnp.where(arrived, cnt[safe], 0.0))
+        if failure:
+            bad = jnp.zeros(k, bool).at[safe].set(
+                valid & (flags == bandit_jax.FLAG_CORRUPT), mode="drop")
     elif cohort == "selected":
         keys = jax.vmap(lambda i: jax.random.fold_in(perm_key, i))(safe)
         trained = vm(params, task.train_x, task.train_y, task.part_idx[safe],
                      task.part_count[safe], lr, keys)
-        w = jnp.where(valid, cnt[safe], 0.0)
+        w = jnp.where(arrived, cnt[safe], 0.0)
+        if failure:
+            bad = valid & (flags == bandit_jax.FLAG_CORRUPT)
     else:
         raise ValueError(f"unknown cohort {cohort!r}")
-    new_params = _masked_fedavg(trained, w, use_kernel)
-    # all-padding selection (fewer candidates than S): keep the old model
-    keep = valid.any()
-    return jax.tree.map(lambda a, b: jnp.where(keep, a, b), new_params, params)
+    if not failure:
+        new_params = _masked_fedavg(trained, w, use_kernel)
+        # all-padding selection (fewer candidates than S): keep the old model
+        keep = valid.any()
+        return jax.tree.map(lambda a, b: jnp.where(keep, a, b), new_params,
+                            params)
+    # corrupted emission: the client's bits arrived mangled — poison the
+    # whole row and let the aggregation guard prove it never propagates
+    poison = lambda t: jnp.where(       # noqa: E731 — local row mask
+        bad.reshape(bad.shape + (1,) * (t.ndim - 1)), jnp.nan, t)
+    trained = jax.tree.map(poison, trained)
+    new_params, w_ok, n_rejected = _masked_fedavg(trained, w, use_kernel,
+                                                  guard=True)
+    # graceful degradation: no surviving update (all failed/corrupt/padding)
+    # => this round is a no-op on the model
+    keep = w_ok.sum() > 0.0
+    params = jax.tree.map(lambda a, b: jnp.where(keep, a, b), new_params,
+                          params)
+    return params, n_rejected
 
 
 # ---------------------------------------------------------------------------
@@ -381,7 +442,8 @@ def _round_lrs(n_rounds: int) -> jnp.ndarray:
 def _make_protocol_round(task: FlTask, hyper, *, policy: str, s_round: int,
                          epochs: int, batch_size: int, cohort: str,
                          use_kernel: bool, cfg: cnn.CnnConfig,
-                         fused: bool = False, native_perm: bool = False):
+                         fused: bool = False, native_perm: bool = False,
+                         fault=None, deadline: float | None = None):
     """The ONE learning-coupled round — select, schedule, observe, train,
     evaluate — shared by the single-shot and chunked scans.
 
@@ -390,27 +452,48 @@ def _make_protocol_round(task: FlTask, hyper, *, policy: str, s_round: int,
     is a [K] bool candidate mask, or — with ``fused`` — the [C] sorted
     candidate indices consumed by the one-pass fused round
     (kernels/ops.bandit_round); both encodings select bitwise-identically.
-    """
+
+    ``deadline`` (static) compiles in the failure-aware layer: the bandit
+    observes censored times, training weights only the arrived slots
+    (corrupt deltas are poisoned and rejected by the aggregation guard in
+    ``_masked_fedavg``), and the round returns a sixth per-slot ``flags``
+    output (bandit_jax.FLAG_*)."""
+    failure = deadline is not None
     client_update = make_client_update(
         functools.partial(cnn.loss_fn, cfg=cfg),
         epochs=epochs, batch_size=batch_size, native_perm=native_perm)
     evaluate = make_evaluator(functools.partial(cnn.apply, cfg=cfg))
     if fused:
-        round_fn = bandit_jax.make_round_fn(policy, s_round)
+        round_fn = bandit_jax.make_round_fn(policy, s_round, fault=fault,
+                                            deadline=deadline)
     else:
         select_fn = bandit_jax.make_select_fn(policy, s_round)
         decay = bandit_jax.policy_decay(policy)
 
     def protocol_round(params, bstate, cand, t_ud, t_ul, k_pol, k_perm, lr):
+        flags = None
         if fused:
-            bstate, sel, round_time = round_fn(bstate, cand, k_pol, t_ud,
-                                               t_ul, hyper)
+            out = round_fn(bstate, cand, k_pol, t_ud, t_ul, hyper)
+            if failure:
+                bstate, sel, round_time, flags = out
+            else:
+                bstate, sel, round_time = out
+        elif failure:
+            bstate, round_time, sel, flags = engine_jax._round(
+                bstate, cand, t_ud, t_ul, select_fn, hyper, k_pol,
+                decay=decay, fault=fault, deadline=deadline)
         else:
             sel = select_fn(bstate, cand, k_pol, t_ud, t_ul, hyper)
             round_time, incs = engine_jax._schedule(sel, t_ud, t_ul)
             safe = jnp.where(sel >= 0, sel, 0)
             bstate = bandit_jax.observe(bstate, sel, t_ud[safe], t_ul[safe],
                                         incs, decay=decay)
+        if failure:
+            params, _n_rej = _train_round(
+                params, sel, task, lr, k_perm, client_update=client_update,
+                cohort=cohort, use_kernel=use_kernel, flags=flags)
+            acc = evaluate(params, task.test_x, task.test_y, task.test_mask)
+            return params, bstate, round_time, acc, sel, flags
         params = _train_round(params, sel, task, lr, k_perm,
                               client_update=client_update, cohort=cohort,
                               use_kernel=use_kernel)
@@ -425,7 +508,8 @@ def _make_sampled_protocol_round(task: FlTask, hyper, *, policy: str,
                                  cohort: str, use_kernel: bool,
                                  cfg: cnn.CnnConfig, fluctuate: bool,
                                  eta, model_bits, fused: bool = True,
-                                 native_perm: bool = False):
+                                 native_perm: bool = False,
+                                 fault=None, deadline: float | None = None):
     """The streamed-sampling twin of ``_make_protocol_round``: the round
     draws its own Eq. (8) times at the [C] candidate slice instead of
     consuming presampled [K] arrays.
@@ -438,34 +522,54 @@ def _make_sampled_protocol_round(task: FlTask, hyper, *, policy: str,
     the unfused twin samples the same [C] slice with the same key and
     scatters it into zero-[K] buffers for the mask pipeline — bitwise the
     same selections, times and state.
+
+    ``deadline``/``fault``: see ``_make_protocol_round`` — a sixth
+    per-slot ``flags`` output when the failure layer is compiled in.
     """
+    failure = deadline is not None
     client_update = make_client_update(
         functools.partial(cnn.loss_fn, cfg=cfg),
         epochs=epochs, batch_size=batch_size, native_perm=native_perm)
     evaluate = make_evaluator(functools.partial(cnn.apply, cfg=cfg))
     k = task.part_count.shape[0]
     if fused:
-        round_fn = bandit_jax.make_sampled_round_fn(policy, s_round,
-                                                    fluctuate=fluctuate)
+        round_fn = bandit_jax.make_sampled_round_fn(
+            policy, s_round, fluctuate=fluctuate, fault=fault,
+            deadline=deadline)
     else:
         select_fn = bandit_jax.make_select_fn(policy, s_round)
         decay = bandit_jax.policy_decay(policy)
 
     def protocol_round(params, bstate, cand, mu_theta, mu_gamma, k_time,
                        k_pol, k_perm, lr):
+        flags = None
         if fused:
-            bstate, sel, round_time = round_fn(
+            out = round_fn(
                 bstate, cand, k_pol, k_time, mu_theta, mu_gamma,
                 task.env.n_samples, eta, model_bits, hyper)
+            if failure:
+                bstate, sel, round_time, flags = out
+            else:
+                bstate, sel, round_time = out
         else:
             t_ud_c, t_ul_c = engine_jax.sample_times_candidates(
                 k_time, cand, task.env.n_samples, mu_theta, mu_gamma, eta,
                 model_bits, fluctuate=fluctuate)
             t_ud, t_ul, mask = bandit_jax.scatter_cand_times(cand, t_ud_c,
                                                              t_ul_c, k)
-            bstate, round_time, sel = engine_jax._round(
+            out = engine_jax._round(
                 bstate, mask, t_ud, t_ul, select_fn, hyper, k_pol,
-                decay=decay)
+                decay=decay, fault=fault, deadline=deadline)
+            if failure:
+                bstate, round_time, sel, flags = out
+            else:
+                bstate, round_time, sel = out
+        if failure:
+            params, _n_rej = _train_round(
+                params, sel, task, lr, k_perm, client_update=client_update,
+                cohort=cohort, use_kernel=use_kernel, flags=flags)
+            acc = evaluate(params, task.test_x, task.test_y, task.test_mask)
+            return params, bstate, round_time, acc, sel, flags
         params = _train_round(params, sel, task, lr, k_perm,
                               client_update=client_update, cohort=cohort,
                               use_kernel=use_kernel)
@@ -516,7 +620,8 @@ def _scan_rounds_chunked(task: FlTask, hyper, seed, *, policy: str,
                          cohort: str, use_kernel: bool, cfg: cnn.CnnConfig,
                          client_mesh=None, fused: bool = True,
                          native_perm: bool = False,
-                         fast_sampling: bool = True):
+                         fast_sampling: bool = True,
+                         deadline: float | None = None):
     """The chunked twin of ``_presample`` + ``_scan_rounds``: an outer scan
     over R/c chunks regenerates each chunk's candidates/multipliers/draws
     from the same per-round keys ``_presample`` would use, so peak memory
@@ -533,7 +638,14 @@ def _scan_rounds_chunked(task: FlTask, hyper, seed, *, policy: str,
     — a different (equally distributed) stream from the legacy presample.
     ``fast_sampling=False`` preserves the legacy stream exactly; the
     replay/host-reference twins (``_presample``/``_scan_rounds``) live on
-    that path only."""
+    that path only.
+
+    ``deadline`` (static) compiles in the failure-aware layer — the
+    scenario's FaultModel draws per-round fault streams, the bandit learns
+    censored observations, and a fourth [R, s_round] FLAG_* trace is
+    returned (see _make_protocol_round)."""
+    failure = deadline is not None
+    fault = bandit_jax.resolve_fault(scen.fault, deadline)
     k = task.part_count.shape[0]
     # below FUSED_MIN_K the unfused mask pipeline wins (see engine_jax);
     # results are bitwise-identical either way
@@ -553,12 +665,21 @@ def _scan_rounds_chunked(task: FlTask, hyper, seed, *, policy: str,
     state0 = engine_jax._client_constrain(bandit_jax.BanditState.create(k),
                                           client_mesh)
 
+    def _shape_out(ys):
+        # ys: (rts, accs, sels) or (rts, accs, sels, flags), chunk-stacked
+        out = (ys[0].reshape(n_rounds), ys[1].reshape(n_rounds),
+               ys[2].reshape(n_rounds, s_round))
+        if failure:
+            out += (ys[3].reshape(n_rounds, s_round),)
+        return out
+
     if fast_sampling:
         protocol_round = _make_sampled_protocol_round(
             task, hyper, policy=policy, s_round=s_round, epochs=epochs,
             batch_size=batch_size, cohort=cohort, use_kernel=use_kernel,
             cfg=cfg, fluctuate=fluctuate, eta=eta, model_bits=model_bits,
-            fused=fused, native_perm=native_perm)
+            fused=fused, native_perm=native_perm, fault=fault,
+            deadline=deadline)
 
         def fast_chunk_body(carry, xs):
             params, bstate, m_theta, m_gamma = carry
@@ -571,13 +692,14 @@ def _scan_rounds_chunked(task: FlTask, hyper, seed, *, policy: str,
                 params, bstate, m_th, m_ga = carry2
                 cand, mult, k_t, k_pol, k_perm, k_c, lr = x
                 mu_t = engine_jax._client_constrain(m_th * mult, client_mesh)
-                params, bstate, rt, acc, sel = protocol_round(
+                outs = protocol_round(
                     params, bstate, cand, mu_t, m_ga, k_t, k_pol, k_perm,
                     lr)
+                params, bstate = outs[0], outs[1]
                 if scen.churn_prob > 0.0:
                     m_th, m_ga = engine_jax.churn_step(k_c, m_th, m_ga,
                                                        scen.churn_prob)
-                return (params, bstate, m_th, m_ga), (rt, acc, sel)
+                return (params, bstate, m_th, m_ga), outs[2:]
 
             carry2, ys = jax.lax.scan(
                 step, (params, bstate, m_theta, m_gamma),
@@ -587,15 +709,14 @@ def _scan_rounds_chunked(task: FlTask, hyper, seed, *, policy: str,
 
         carry0 = (task.params0, state0, task.env.mean_theta,
                   task.env.mean_gamma)
-        _, (rts, accs, sels) = jax.lax.scan(fast_chunk_body, carry0,
-                                            (keys, rounds, lrs))
-        return (rts.reshape(n_rounds), accs.reshape(n_rounds),
-                sels.reshape(n_rounds, s_round))
+        _, ys = jax.lax.scan(fast_chunk_body, carry0, (keys, rounds, lrs))
+        return _shape_out(ys)
 
     protocol_round = _make_protocol_round(
         task, hyper, policy=policy, s_round=s_round, epochs=epochs,
         batch_size=batch_size, cohort=cohort, use_kernel=use_kernel, cfg=cfg,
-        fused=fused, native_perm=native_perm)
+        fused=fused, native_perm=native_perm, fault=fault,
+        deadline=deadline)
 
     def chunk_body(carry, xs):
         params, bstate, m_theta, m_gamma = carry
@@ -620,10 +741,10 @@ def _scan_rounds_chunked(task: FlTask, hyper, seed, *, policy: str,
             def step(carry2, x):
                 params, bstate = carry2
                 cand, t_ud_r, t_ul_r, k_pol, k_perm, lr = x
-                params, bstate, rt, acc, sel = protocol_round(
+                outs = protocol_round(
                     params, bstate, cand, t_ud_r, t_ul_r, k_pol,
                     k_perm, lr)
-                return (params, bstate), (rt, acc, sel)
+                return (outs[0], outs[1]), outs[2:]
 
             (params, bstate), ys = jax.lax.scan(
                 step, (params, bstate),
@@ -636,11 +757,11 @@ def _scan_rounds_chunked(task: FlTask, hyper, seed, *, policy: str,
             t_ud, t_ul = engine_jax.sample_times(
                 task.env.n_samples, m_th * mult, m_ga, eta, model_bits,
                 k_t, k_g, fluctuate=fluctuate)
-            params, bstate, rt, acc, sel = protocol_round(
+            outs = protocol_round(
                 params, bstate, cand, t_ud, t_ul, k_pol, k_perm, lr)
             m_th, m_ga = engine_jax.churn_step(k_c, m_th, m_ga,
                                                scen.churn_prob)
-            return (params, bstate, m_th, m_ga), (rt, acc, sel)
+            return (outs[0], outs[1], m_th, m_ga), outs[2:]
 
         carry2, ys = jax.lax.scan(
             step, (params, bstate, m_theta, m_gamma),
@@ -650,10 +771,8 @@ def _scan_rounds_chunked(task: FlTask, hyper, seed, *, policy: str,
 
     carry0 = (task.params0, state0, task.env.mean_theta,
               task.env.mean_gamma)
-    _, (rts, accs, sels) = jax.lax.scan(chunk_body, carry0,
-                                        (keys, rounds, lrs))
-    return (rts.reshape(n_rounds), accs.reshape(n_rounds),
-            sels.reshape(n_rounds, s_round))
+    _, ys = jax.lax.scan(chunk_body, carry0, (keys, rounds, lrs))
+    return _shape_out(ys)
 
 
 def _run_fl_one(task: FlTask, model_bits, hyper, eta, seed, *, policy: str,
@@ -662,7 +781,7 @@ def _run_fl_one(task: FlTask, model_bits, hyper, eta, seed, *, policy: str,
                 use_kernel: bool, cfg: cnn.CnnConfig,
                 chunk_rounds: int | None = None, client_mesh=None,
                 fused: bool = True, native_perm: bool = False,
-                fast_sampling: bool = True):
+                fast_sampling: bool = True, deadline: float | None = None):
     """One (policy, seed) grid point, always through the chunked scan —
     the default is one chunk spanning the whole run.  With
     ``fast_sampling=False`` that consumes the stream ``_presample`` would
@@ -676,7 +795,7 @@ def _run_fl_one(task: FlTask, model_bits, hyper, eta, seed, *, policy: str,
         fluctuate=fluctuate, epochs=epochs, batch_size=batch_size,
         cohort=cohort, use_kernel=use_kernel, cfg=cfg,
         client_mesh=client_mesh, fused=fused, native_perm=native_perm,
-        fast_sampling=fast_sampling)
+        fast_sampling=fast_sampling, deadline=deadline)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -726,13 +845,13 @@ def run_replay(task: FlTask, hyper, cand_masks, t_ud, t_ul, pol_keys,
 @functools.partial(jax.jit, static_argnames=(
     "policies", "scen", "n_rounds", "s_round", "n_req", "fluctuate",
     "epochs", "batch_size", "cohort", "use_kernel", "cfg", "chunk_rounds",
-    "mesh", "shard", "fused", "native_perm", "fast_sampling"),
+    "mesh", "shard", "fused", "native_perm", "fast_sampling", "deadline"),
     donate_argnames=("seeds",))
 def _run_grid(task: FlTask, model_bits, hypers, eta, seeds, *,
               policies: tuple[str, ...], scen: Scenario, n_rounds, s_round,
               n_req, fluctuate, epochs, batch_size, cohort, use_kernel, cfg,
               chunk_rounds=None, mesh=None, shard="grid", fused=True,
-              native_perm=False, fast_sampling=True):
+              native_perm=False, fast_sampling=True, deadline=None):
     """One jit call for the whole accuracy sweep: the policy axis is
     unrolled statically (each entry vmaps its own selection rule over the
     seed axis); hypers: [P], seeds: [S], donated.
@@ -746,20 +865,26 @@ def _run_grid(task: FlTask, model_bits, hypers, eta, seeds, *,
     through the chunked scan.
     """
     client_mesh = mesh if (mesh is not None and shard == "clients") else None
-    rts, accs, sels = [], [], []
+    rts, accs, sels, fls = [], [], [], []
     for i, name in enumerate(policies):
         f = functools.partial(
             _run_fl_one, policy=name, scen=scen, n_rounds=n_rounds,
             s_round=s_round, n_req=n_req, fluctuate=fluctuate, epochs=epochs,
             batch_size=batch_size, cohort=cohort, use_kernel=use_kernel,
             cfg=cfg, chunk_rounds=chunk_rounds, client_mesh=client_mesh,
-            fused=fused, native_perm=native_perm, fast_sampling=fast_sampling)
+            fused=fused, native_perm=native_perm, fast_sampling=fast_sampling,
+            deadline=deadline)
         g = jax.vmap(f, in_axes=(None, None, None, None, 0))
         if mesh is not None and shard == "grid":
             g = dist_sharding.shard_vmapped(g, mesh, sharded_argnums=(4,))
-        rt, acc, sel = g(task, model_bits, hypers[i], eta, seeds)
-        rts.append(rt), accs.append(acc), sels.append(sel)
-    return jnp.stack(rts), jnp.stack(accs), jnp.stack(sels)
+        out = g(task, model_bits, hypers[i], eta, seeds)
+        rts.append(out[0]), accs.append(out[1]), sels.append(out[2])
+        if deadline is not None:
+            fls.append(out[3])
+    stacked = (jnp.stack(rts), jnp.stack(accs), jnp.stack(sels))
+    if deadline is not None:
+        stacked += (jnp.stack(fls),)
+    return stacked
 
 
 def shard_task_for_clients(task: FlTask, mesh) -> FlTask:
@@ -795,6 +920,9 @@ class FlSweepResult:
     round_times: np.ndarray     # [P, S, R]
     accuracy: np.ndarray        # [P, S, R]
     selected: np.ndarray        # [P, S, R, s_round] (-1 padded)
+    # per-slot outcome flags (core.bandit_jax.FLAG_*) when the sweep ran
+    # with a round deadline; None on fault-free sweeps
+    flags: np.ndarray | None = None    # [P, S, R, s_round] int32
 
     @property
     def elapsed(self) -> np.ndarray:
@@ -804,6 +932,24 @@ class FlSweepResult:
     def toa(self, target: float) -> np.ndarray:
         """ToA@target per grid point, [P, S] (inf = never reached)."""
         return metrics.time_to_accuracy(self.elapsed, self.accuracy, target)
+
+    def fault_counts(self) -> dict[str, np.ndarray]:
+        """Per-grid-point outcome totals over all rounds/slots, [P, S] per
+        category; dispatched = ok + crashed + churned + deadline_missed +
+        corrupt (the conservation invariant — see
+        sim/engine_jax.SweepResult.fault_counts).  Requires a
+        failure-aware sweep (``deadline`` set)."""
+        if self.flags is None:
+            raise ValueError("fault_counts() requires a sweep run with a "
+                             "deadline (the failure-aware layer)")
+        f = self.flags
+        cat = {"ok": bandit_jax.FLAG_OK, "crashed": bandit_jax.FLAG_CRASH,
+               "churned": bandit_jax.FLAG_CHURN,
+               "deadline_missed": bandit_jax.FLAG_DEADLINE,
+               "corrupt": bandit_jax.FLAG_CORRUPT}
+        out = {k: (f == v).sum(axis=(-2, -1)) for k, v in cat.items()}
+        out["dispatched"] = (f >= 0).sum(axis=(-2, -1))
+        return out
 
     def summary(self, targets: tuple[float, ...] = (0.5, 0.7, 0.8)) -> str:
         return metrics.toa_table(list(self.policies), self.elapsed,
@@ -833,6 +979,7 @@ def accuracy_sweep(scenario: Scenario | str = "paper-baseline",
                    fused: bool = True,
                    fast_sampling: bool | None = None,
                    fast_perm: bool | None = None,
+                   deadline: float | None = None,
                    **task_kwargs) -> FlSweepResult:
     """Run the full (policy x seed) accuracy-vs-time grid as ONE jit call.
 
@@ -864,6 +1011,16 @@ def accuracy_sweep(scenario: Scenario | str = "paper-baseline",
     ``jax.random.permutation`` path exactly when every shard is full
     (see ``make_client_update``); the host reference applies the same
     rule, so replay parity is preserved either way.
+
+    ``deadline`` (seconds, None = off) compiles in the failure-aware round
+    layer — identical semantics to ``sim.engine_jax.sweep``: crash/churn/
+    deadline-missing clients are censored at the bandit and excluded from
+    aggregation, corrupted uploads are NaN-poisoned and rejected by the
+    in-jit aggregation guard (never reaching the global model), an
+    all-failed round keeps the previous model while the clock advances by
+    T_max, and the result carries per-slot FLAG_* traces
+    (``FlSweepResult.fault_counts``).  At None the layer compiles away and
+    the sweep reproduces fault-free trajectories bitwise.
     """
     scen = get_scenario(scenario) if isinstance(scenario, str) else scenario
     if shard not in ("grid", "clients"):
@@ -874,6 +1031,11 @@ def accuracy_sweep(scenario: Scenario | str = "paper-baseline",
     elif task_kwargs:
         raise ValueError("pass either a prebuilt task or task_kwargs")
     n_clients = task.n_clients
+    if s_round > n_clients:
+        raise ValueError(f"s_round={s_round} exceeds n_clients={n_clients}: "
+                         f"cannot select more clients than exist")
+    deadline = None if deadline is None else float(deadline)
+    bandit_jax.resolve_fault(scen.fault, deadline)   # validates the combo
     pol_names, hypers = [], []
     for p in policies:
         name, hyper = p if isinstance(p, tuple) else (p, None)
@@ -899,7 +1061,7 @@ def accuracy_sweep(scenario: Scenario | str = "paper-baseline",
     fast_sampling = engine_jax.resolve_fast_sampling(fast_sampling,
                                                      n_clients)
     with suppress_unusable_donation_warnings():
-        rts, accs, sels = _run_grid(
+        out = _run_grid(
             task, jnp.float32(model_bits), jnp.asarray(hypers, jnp.float32),
             jnp.float32(eta), jnp.asarray(g_seeds),
             policies=tuple(pol_names), scen=scen, n_rounds=n_rounds,
@@ -907,13 +1069,17 @@ def accuracy_sweep(scenario: Scenario | str = "paper-baseline",
             fluctuate=fluctuate, epochs=epochs, batch_size=batch_size,
             cohort=cohort, use_kernel=bool(use_kernel), cfg=cfg,
             chunk_rounds=chunk_rounds, mesh=mesh, shard=shard, fused=fused,
-            native_perm=native_perm, fast_sampling=fast_sampling)
+            native_perm=native_perm, fast_sampling=fast_sampling,
+            deadline=deadline)
+    rts, accs, sels = out[:3]
     n_seeds = len(seeds)
     return FlSweepResult(
         policies=tuple(pol_names), hypers=tuple(hypers), seeds=seeds,
         eta=float(eta), round_times=np.asarray(rts)[:, :n_seeds],
         accuracy=np.asarray(accs)[:, :n_seeds],
-        selected=np.asarray(sels)[:, :n_seeds])
+        selected=np.asarray(sels)[:, :n_seeds],
+        flags=(np.asarray(out[3])[:, :n_seeds] if deadline is not None
+               else None))
 
 
 # ---------------------------------------------------------------------------

@@ -45,19 +45,21 @@ BLOCK = 1024        # [K] padding granularity; multiple of 8*128
 def _round_kernel(nsel_ref, sumud_ref, sumul_ref, sumtinc_ref, lastud_ref,
                   lastul_ref, histud_ref, histul_ref, histn_ref, discn_ref,
                   discud_ref, discul_ref, total_ref, disctotal_ref, mask_ref,
-                  tud_ref, tul_ref, rand_ref, hyper_ref,
+                  tud_ref, tul_ref, rand_ref, hyper_ref, nfail_ref, fu_ref,
                   o_nsel, o_sumud, o_sumul, o_sumtinc, o_lastud, o_lastul,
                   o_histud, o_histul, o_histn, o_discn, o_discud, o_discul,
-                  o_total, o_disctotal, o_sel, o_rt,
-                  *, policy: str, s_round: int, w: int, decay: float):
+                  o_total, o_disctotal, o_sel, o_rt, o_nfail, o_flags,
+                  *, policy: str, s_round: int, w: int, decay: float,
+                  fault, deadline):
     _round_body(
         nsel_ref, sumud_ref, sumul_ref, sumtinc_ref, lastud_ref, lastul_ref,
         histud_ref, histul_ref, histn_ref, discn_ref, discud_ref, discul_ref,
         total_ref, disctotal_ref, mask_ref, tud_ref[...], tul_ref[...],
-        rand_ref, hyper_ref, o_nsel, o_sumud, o_sumul, o_sumtinc, o_lastud,
-        o_lastul, o_histud, o_histul, o_histn, o_discn, o_discud, o_discul,
-        o_total, o_disctotal, o_sel, o_rt, policy=policy, s_round=s_round,
-        w=w, decay=decay)
+        rand_ref, hyper_ref, nfail_ref, fu_ref, o_nsel, o_sumud, o_sumul,
+        o_sumtinc, o_lastud, o_lastul, o_histud, o_histul, o_histn, o_discn,
+        o_discud, o_discul, o_total, o_disctotal, o_sel, o_rt, o_nfail,
+        o_flags, policy=policy, s_round=s_round, w=w, decay=decay,
+        fault=fault, deadline=deadline)
 
 
 def _sampled_round_kernel(nsel_ref, sumud_ref, sumul_ref, sumtinc_ref,
@@ -65,12 +67,14 @@ def _sampled_round_kernel(nsel_ref, sumud_ref, sumul_ref, sumtinc_ref,
                           histn_ref, discn_ref, discud_ref, discul_ref,
                           total_ref, disctotal_ref, mask_ref, cand_ref,
                           u2_ref, mutheta_ref, mugamma_ref, nsamp_ref,
-                          eta_ref, bits_ref, rand_ref, hyper_ref,
-                          o_nsel, o_sumud, o_sumul, o_sumtinc, o_lastud,
-                          o_lastul, o_histud, o_histul, o_histn, o_discn,
-                          o_discud, o_discul, o_total, o_disctotal, o_sel,
-                          o_rt, *, policy: str, s_round: int, w: int,
-                          decay: float, k: int, fluctuate: bool):
+                          eta_ref, bits_ref, rand_ref, hyper_ref, nfail_ref,
+                          fu_ref, o_nsel, o_sumud, o_sumul, o_sumtinc,
+                          o_lastud, o_lastul, o_histud, o_histul, o_histn,
+                          o_discn, o_discud, o_discul, o_total, o_disctotal,
+                          o_sel, o_rt, o_nfail, o_flags,
+                          *, policy: str, s_round: int, w: int,
+                          decay: float, k: int, fluctuate: bool, fault,
+                          deadline):
     """The streamed-sampling variant: the Eq. (8) truncnorm transform runs
     HERE, in VMEM, on the [C] candidate slice (``u2_ref``: [2, C] uniforms,
     ``mutheta_ref``/``mugamma_ref``/``nsamp_ref``: [Kp] per-client means),
@@ -95,23 +99,30 @@ def _sampled_round_kernel(nsel_ref, sumud_ref, sumul_ref, sumtinc_ref,
         nsel_ref, sumud_ref, sumul_ref, sumtinc_ref, lastud_ref, lastul_ref,
         histud_ref, histul_ref, histn_ref, discn_ref, discud_ref, discul_ref,
         total_ref, disctotal_ref, mask_ref, t_ud, t_ul, rand_ref, hyper_ref,
-        o_nsel, o_sumud, o_sumul, o_sumtinc, o_lastud, o_lastul, o_histud,
-        o_histul, o_histn, o_discn, o_discud, o_discul, o_total, o_disctotal,
-        o_sel, o_rt, policy=policy, s_round=s_round, w=w, decay=decay)
+        nfail_ref, fu_ref, o_nsel, o_sumud, o_sumul, o_sumtinc, o_lastud,
+        o_lastul, o_histud, o_histul, o_histn, o_discn, o_discud, o_discul,
+        o_total, o_disctotal, o_sel, o_rt, o_nfail, o_flags, policy=policy,
+        s_round=s_round, w=w, decay=decay, fault=fault, deadline=deadline)
 
 
 def _round_body(nsel_ref, sumud_ref, sumul_ref, sumtinc_ref, lastud_ref,
                 lastul_ref, histud_ref, histul_ref, histn_ref, discn_ref,
                 discud_ref, discul_ref, total_ref, disctotal_ref, mask_ref,
-                t_ud, t_ul, rand_ref, hyper_ref,
+                t_ud, t_ul, rand_ref, hyper_ref, nfail_ref, fu_ref,
                 o_nsel, o_sumud, o_sumul, o_sumtinc, o_lastud, o_lastul,
                 o_histud, o_histul, o_histn, o_discn, o_discud, o_discul,
-                o_total, o_disctotal, o_sel, o_rt,
-                *, policy: str, s_round: int, w: int, decay: float):
+                o_total, o_disctotal, o_sel, o_rt, o_nfail, o_flags,
+                *, policy: str, s_round: int, w: int, decay: float,
+                fault=None, deadline: float | None = None):
     """score -> select -> schedule -> observe on VMEM-resident values;
     ``t_ud``/``t_ul`` arrive as loaded [Kp] values (from refs in the plain
-    kernel, computed in-VMEM in the sampled one)."""
+    kernel, computed in-VMEM in the sampled one).  A static ``deadline``
+    compiles in the failure layer (core.bandit_jax.censor_slots on the
+    caller-drawn ``fu_ref`` uniforms, censored observe, n_fail counts and
+    the per-slot outcome flags); at None the body is exactly the fault-free
+    round and n_fail passes straight through."""
     n_sel = nsel_ref[...]
+    n_fail = nfail_ref[...]
     sum_ud, sum_ul = sumud_ref[...], sumul_ref[...]
     sum_tinc = sumtinc_ref[...]
     last_ud, last_ul = lastud_ref[...], lastul_ref[...]
@@ -148,10 +159,23 @@ def _round_body(nsel_ref, sumud_ref, sumul_ref, sumtinc_ref, lastud_ref,
     sul = jnp.where(valid, t_ul[safe], 0.0)
     t_d_true = jnp.max(jnp.where(valid, sul, 0.0))
 
-    def tstep(i, t):
-        t2 = jnp.maximum(t, t_d_true + sud[i]) + sul[i]
-        return jnp.where(valid[i], t2, t)
-    round_time = jax.lax.fori_loop(0, s_round, tstep, t_d_true)
+    if deadline is None:
+        def tstep(i, t):
+            t2 = jnp.maximum(t, t_d_true + sud[i]) + sul[i]
+            return jnp.where(valid[i], t2, t)
+        round_time = jax.lax.fori_loop(0, s_round, tstep, t_d_true)
+        finish = None
+    else:
+        # same clock recursion, additionally recording each slot's
+        # completion offset (schedule_completions' ``finish``, bitwise)
+        def tstep(i, carry):
+            t, fin = carry
+            t2 = jnp.maximum(t, t_d_true + sud[i]) + sul[i]
+            t_new = jnp.where(valid[i], t2, t)
+            return t_new, fin.at[i].set(t_new)
+        round_time, finish = jax.lax.fori_loop(
+            0, s_round, tstep,
+            (t_d_true, jnp.zeros((s_round,), jnp.float32)))
 
     def istep(i, carry):
         t, td, incs = carry
@@ -164,17 +188,25 @@ def _round_body(nsel_ref, sumud_ref, sumul_ref, sumtinc_ref, lastud_ref,
         0, s_round, istep,
         (jnp.float32(0), jnp.float32(0), jnp.zeros((s_round,), jnp.float32)))
 
+    # ---- failure layer (shared censor_slots; compiled away at None) ------
+    if deadline is None:
+        obs_ud, obs_ul, obs_inc = sud, sul, incs
+    else:
+        obs_ud, obs_ul, obs_inc, fail, flags, round_time = \
+            bandit_jax.censor_slots(valid, sud, sul, incs, finish,
+                                    round_time, fu_ref[...], fault, deadline)
+
     # ---- observe (expression-for-expression core.bandit_jax.observe) -----
     drop = jnp.where(valid, safe, kp)
     slot = n_sel[jnp.clip(sel, 0, kp - 1)] % w
     o_nsel[...] = n_sel.at[drop].add(1, mode="drop")
-    o_sumud[...] = sum_ud.at[drop].add(sud, mode="drop")
-    o_sumul[...] = sum_ul.at[drop].add(sul, mode="drop")
-    o_sumtinc[...] = sum_tinc.at[drop].add(incs, mode="drop")
-    o_lastud[...] = last_ud.at[drop].set(sud, mode="drop")
-    o_lastul[...] = last_ul.at[drop].set(sul, mode="drop")
-    o_histud[...] = hist_ud.at[drop, slot].set(sud, mode="drop")
-    o_histul[...] = hist_ul.at[drop, slot].set(sul, mode="drop")
+    o_sumud[...] = sum_ud.at[drop].add(obs_ud, mode="drop")
+    o_sumul[...] = sum_ul.at[drop].add(obs_ul, mode="drop")
+    o_sumtinc[...] = sum_tinc.at[drop].add(obs_inc, mode="drop")
+    o_lastud[...] = last_ud.at[drop].set(obs_ud, mode="drop")
+    o_lastul[...] = last_ul.at[drop].set(obs_ul, mode="drop")
+    o_histud[...] = hist_ud.at[drop, slot].set(obs_ud, mode="drop")
+    o_histul[...] = hist_ul.at[drop, slot].set(obs_ul, mode="drop")
     o_histn[...] = jnp.minimum(hist_n.at[drop].add(1, mode="drop"), w)
     o_total[0] = total + valid.sum().astype(jnp.int32)
     if float(decay) == 1.0:     # static: stationary policies skip the decay
@@ -182,20 +214,30 @@ def _round_body(nsel_ref, sumud_ref, sumul_ref, sumtinc_ref, lastud_ref,
         o_disctotal[0] = disc_total
     else:
         o_discn[...] = (disc_n * decay).at[drop].add(1.0, mode="drop")
-        o_discud[...] = (disc_ud * decay).at[drop].add(sud, mode="drop")
-        o_discul[...] = (disc_ul * decay).at[drop].add(sul, mode="drop")
+        o_discud[...] = (disc_ud * decay).at[drop].add(obs_ud, mode="drop")
+        o_discul[...] = (disc_ul * decay).at[drop].add(obs_ul, mode="drop")
         o_disctotal[0] = disc_total * decay + valid.sum(dtype=jnp.float32)
+    if deadline is None:
+        o_nfail[...] = n_fail
+        o_flags[...] = jnp.where(valid, 0, -1).astype(jnp.int32)
+    else:
+        fdrop = jnp.where(valid & fail, safe, kp)
+        o_nfail[...] = n_fail.at[fdrop].add(1, mode="drop")
+        o_flags[...] = flags
     o_sel[...] = sel
     o_rt[0] = round_time
 
 
 @functools.partial(jax.jit, static_argnames=("policy", "s_round", "decay",
-                                             "interpret"))
+                                             "interpret", "fault",
+                                             "deadline"))
 def bandit_round_pallas(state, cand_idx, t_ud, t_ul, rand, hyper, *,
                         policy: str, s_round: int, decay: float = 1.0,
-                        interpret: bool = True):
+                        interpret: bool = True, fault: tuple | None = None,
+                        deadline: float | None = None, fault_u=None):
     """Fused round on a BanditState; same contract as ref.bandit_round_ref
-    (``cand_idx``: [C] sorted, >= K padding).  Returns (state, sel, rt)."""
+    (``cand_idx``: [C] sorted, >= K padding).  Returns (state, sel, rt) —
+    plus the per-slot flags with the failure layer on (``deadline`` set)."""
     k = t_ud.shape[0]
     w = state.hist_ud.shape[1]
     pad = (-k) % BLOCK
@@ -209,11 +251,14 @@ def bandit_round_pallas(state, cand_idx, t_ud, t_ul, rand, hyper, *,
     mask = jnp.zeros(kp, jnp.int32).at[
         jnp.where(cand_idx < k, cand_idx, kp)].set(1, mode="drop")
     rand = jnp.zeros(k, jnp.float32) if rand is None else rand
+    fu = (jnp.zeros((3, s_round), jnp.float32) if fault_u is None
+          else fault_u)
 
     spec1 = pl.BlockSpec((kp,), lambda i: (0,))
     spec2 = pl.BlockSpec((kp, w), lambda i: (0, 0))
     spec_s = pl.BlockSpec((1,), lambda i: (0,))
     spec_sel = pl.BlockSpec((s_round,), lambda i: (0,))
+    spec_fu = pl.BlockSpec((3, s_round), lambda i: (0, 0))
 
     out_shape = (
         jax.ShapeDtypeStruct((kp,), jnp.int32),       # n_sel
@@ -226,16 +271,19 @@ def bandit_round_pallas(state, cand_idx, t_ud, t_ul, rand, hyper, *,
         jax.ShapeDtypeStruct((1,), jnp.float32),      # disc_total
         jax.ShapeDtypeStruct((s_round,), jnp.int32),  # sel
         jax.ShapeDtypeStruct((1,), jnp.float32),      # round_time
+        jax.ShapeDtypeStruct((kp,), jnp.int32),       # n_fail
+        jax.ShapeDtypeStruct((s_round,), jnp.int32),  # flags
     )
     out_specs = (spec1, spec1, spec1, spec1, spec1, spec1, spec2, spec2,
                  spec1, spec1, spec1, spec1, spec_s, spec_s, spec_sel,
-                 spec_s)
+                 spec_s, spec1, spec_sel)
     in_specs = [spec1] * 6 + [spec2, spec2] + [spec1] * 4 + \
-        [spec_s, spec_s] + [spec1] * 4 + [spec_s]
+        [spec_s, spec_s] + [spec1] * 4 + [spec_s] + [spec1, spec_fu]
 
     outs = pl.pallas_call(
         functools.partial(_round_kernel, policy=policy, s_round=s_round,
-                          w=w, decay=float(decay)),
+                          w=w, decay=float(decay), fault=fault,
+                          deadline=deadline),
         grid=(1,),
         in_specs=in_specs,
         out_specs=out_specs,
@@ -250,28 +298,36 @@ def bandit_round_pallas(state, cand_idx, t_ud, t_ul, rand, hyper, *,
       state.disc_total.reshape(1), mask,
       pad1(t_ud.astype(jnp.float32)), pad1(t_ul.astype(jnp.float32)),
       pad1(rand.astype(jnp.float32)),
-      jnp.asarray(hyper, jnp.float32).reshape(1))
+      jnp.asarray(hyper, jnp.float32).reshape(1),
+      pad1(state.n_fail), fu.astype(jnp.float32))
 
     new_state = state.replace(
         n_sel=outs[0][:k], sum_ud=outs[1][:k], sum_ul=outs[2][:k],
         sum_tinc=outs[3][:k], last_ud=outs[4][:k], last_ul=outs[5][:k],
         hist_ud=outs[6][:k], hist_ul=outs[7][:k], hist_n=outs[8][:k],
         disc_n=outs[9][:k], disc_ud=outs[10][:k], disc_ul=outs[11][:k],
-        total=outs[12][0], disc_total=outs[13][0])
-    return new_state, outs[14], outs[15][0]
+        total=outs[12][0], disc_total=outs[13][0], n_fail=outs[16][:k])
+    if deadline is None:
+        return new_state, outs[14], outs[15][0]
+    return new_state, outs[14], outs[15][0], outs[17]
 
 
 @functools.partial(jax.jit, static_argnames=("policy", "s_round", "decay",
-                                             "fluctuate", "interpret"))
+                                             "fluctuate", "interpret",
+                                             "fault", "deadline"))
 def bandit_round_pallas_sampled(state, cand_idx, u2, rand, theta_mu,
                                 gamma_mu, n_samples, eta, model_bits, hyper,
                                 *, policy: str, s_round: int,
                                 decay: float = 1.0, fluctuate: bool = True,
-                                interpret: bool = True):
+                                interpret: bool = True,
+                                fault: tuple | None = None,
+                                deadline: float | None = None,
+                                fault_u=None):
     """Fused round that draws its own Eq. (8) times in-VMEM; same contract
     as ops.bandit_round_sampled (``cand_idx``: [C] sorted, >= K padding;
     ``u2``: [2, C] uniforms or None; ``theta_mu``/``gamma_mu``/
-    ``n_samples``: [K] means).  Returns (state, sel, rt)."""
+    ``n_samples``: [K] means).  Returns (state, sel, rt) — plus the
+    per-slot flags with the failure layer on (``deadline`` set)."""
     k = theta_mu.shape[0]
     w = state.hist_ud.shape[1]
     c = cand_idx.shape[0]
@@ -285,6 +341,8 @@ def bandit_round_pallas_sampled(state, cand_idx, u2, rand, theta_mu,
         jnp.where(cand_idx < k, cand_idx, kp)].set(1, mode="drop")
     u2 = jnp.zeros((2, c), jnp.float32) if u2 is None else u2
     rand = jnp.zeros(k, jnp.float32) if rand is None else rand
+    fu = (jnp.zeros((3, s_round), jnp.float32) if fault_u is None
+          else fault_u)
 
     spec1 = pl.BlockSpec((kp,), lambda i: (0,))
     spec2 = pl.BlockSpec((kp, w), lambda i: (0, 0))
@@ -292,6 +350,7 @@ def bandit_round_pallas_sampled(state, cand_idx, u2, rand, theta_mu,
     spec_c = pl.BlockSpec((c,), lambda i: (0,))
     spec_u2 = pl.BlockSpec((2, c), lambda i: (0, 0))
     spec_sel = pl.BlockSpec((s_round,), lambda i: (0,))
+    spec_fu = pl.BlockSpec((3, s_round), lambda i: (0, 0))
 
     out_shape = (
         jax.ShapeDtypeStruct((kp,), jnp.int32),       # n_sel
@@ -304,18 +363,21 @@ def bandit_round_pallas_sampled(state, cand_idx, u2, rand, theta_mu,
         jax.ShapeDtypeStruct((1,), jnp.float32),      # disc_total
         jax.ShapeDtypeStruct((s_round,), jnp.int32),  # sel
         jax.ShapeDtypeStruct((1,), jnp.float32),      # round_time
+        jax.ShapeDtypeStruct((kp,), jnp.int32),       # n_fail
+        jax.ShapeDtypeStruct((s_round,), jnp.int32),  # flags
     )
     out_specs = (spec1, spec1, spec1, spec1, spec1, spec1, spec2, spec2,
                  spec1, spec1, spec1, spec1, spec_s, spec_s, spec_sel,
-                 spec_s)
+                 spec_s, spec1, spec_sel)
     in_specs = [spec1] * 6 + [spec2, spec2] + [spec1] * 4 + \
         [spec_s, spec_s] + [spec1, spec_c, spec_u2] + [spec1] * 3 + \
-        [spec_s, spec_s] + [spec1, spec_s]
+        [spec_s, spec_s] + [spec1, spec_s] + [spec1, spec_fu]
 
     outs = pl.pallas_call(
         functools.partial(_sampled_round_kernel, policy=policy,
                           s_round=s_round, w=w, decay=float(decay), k=k,
-                          fluctuate=bool(fluctuate)),
+                          fluctuate=bool(fluctuate), fault=fault,
+                          deadline=deadline),
         grid=(1,),
         in_specs=in_specs,
         out_specs=out_specs,
@@ -334,12 +396,15 @@ def bandit_round_pallas_sampled(state, cand_idx, u2, rand, theta_mu,
       jnp.asarray(eta, jnp.float32).reshape(1),
       jnp.asarray(model_bits, jnp.float32).reshape(1),
       pad1(rand.astype(jnp.float32)),
-      jnp.asarray(hyper, jnp.float32).reshape(1))
+      jnp.asarray(hyper, jnp.float32).reshape(1),
+      pad1(state.n_fail), fu.astype(jnp.float32))
 
     new_state = state.replace(
         n_sel=outs[0][:k], sum_ud=outs[1][:k], sum_ul=outs[2][:k],
         sum_tinc=outs[3][:k], last_ud=outs[4][:k], last_ul=outs[5][:k],
         hist_ud=outs[6][:k], hist_ul=outs[7][:k], hist_n=outs[8][:k],
         disc_n=outs[9][:k], disc_ud=outs[10][:k], disc_ul=outs[11][:k],
-        total=outs[12][0], disc_total=outs[13][0])
-    return new_state, outs[14], outs[15][0]
+        total=outs[12][0], disc_total=outs[13][0], n_fail=outs[16][:k])
+    if deadline is None:
+        return new_state, outs[14], outs[15][0]
+    return new_state, outs[14], outs[15][0], outs[17]

@@ -29,9 +29,13 @@ def _default_interpret() -> bool:
 def bandit_round(state, cand_idx, t_ud, t_ul, rand, hyper, *, policy: str,
                  s_round: int, decay: float = 1.0,
                  use_kernel: bool | None = None,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None,
+                 fault: tuple | None = None, deadline: float | None = None,
+                 fault_u=None):
     """One fused bandit round (score -> select -> schedule -> observe) on a
-    core.bandit_jax.BanditState; returns ``(new_state, sel, round_time)``.
+    core.bandit_jax.BanditState; returns ``(new_state, sel, round_time)``
+    — or ``(new_state, sel, round_time, flags)`` with the failure-aware
+    layer on (``deadline`` set; see ``core.bandit_jax.censor_slots``).
 
     Auto-routing (the fedavg/ucb_score convention): on TPU the round runs
     as the single-pass Pallas kernel (kernels/bandit_round.py); elsewhere
@@ -48,11 +52,13 @@ def bandit_round(state, cand_idx, t_ud, t_ul, rand, hyper, *, policy: str,
     if not use_kernel:
         return _ref.bandit_round_ref(state, cand_idx, t_ud, t_ul, rand,
                                      hyper, policy=policy, s_round=s_round,
-                                     decay=decay)
+                                     decay=decay, fault=fault,
+                                     deadline=deadline, fault_u=fault_u)
     interpret = _default_interpret() if interpret is None else interpret
     return _bandit_round.bandit_round_pallas(
         state, cand_idx, t_ud, t_ul, rand, hyper, policy=policy,
-        s_round=s_round, decay=decay, interpret=interpret)
+        s_round=s_round, decay=decay, interpret=interpret, fault=fault,
+        deadline=deadline, fault_u=fault_u)
 
 
 def bandit_round_sampled(state, cand_idx, u2, rand, theta_mu, gamma_mu,
@@ -60,7 +66,10 @@ def bandit_round_sampled(state, cand_idx, u2, rand, theta_mu, gamma_mu,
                          s_round: int, decay: float = 1.0,
                          fluctuate: bool = True,
                          use_kernel: bool | None = None,
-                         interpret: bool | None = None):
+                         interpret: bool | None = None,
+                         fault: tuple | None = None,
+                         deadline: float | None = None,
+                         fault_u=None):
     """The streamed-sampling fused round: Eq. (8) resource times are drawn
     AT THE CANDIDATE SLICE inside the round instead of arriving as [K]
     arrays; returns ``(new_state, sel, round_time)``.
@@ -86,12 +95,14 @@ def bandit_round_sampled(state, cand_idx, u2, rand, theta_mu, gamma_mu,
         rand_c = None if rand is None else rand[safe_c]
         return _ref.bandit_round_ref(
             state, cand_idx, t_ud_c, t_ul_c, rand_c, hyper, policy=policy,
-            s_round=s_round, decay=decay, sliced=True)
+            s_round=s_round, decay=decay, sliced=True, fault=fault,
+            deadline=deadline, fault_u=fault_u)
     interpret = _default_interpret() if interpret is None else interpret
     return _bandit_round.bandit_round_pallas_sampled(
         state, cand_idx, u2, rand, theta_mu, gamma_mu, n_samples, eta,
         model_bits, hyper, policy=policy, s_round=s_round, decay=decay,
-        fluctuate=fluctuate, interpret=interpret)
+        fluctuate=fluctuate, interpret=interpret, fault=fault,
+        deadline=deadline, fault_u=fault_u)
 
 
 def ucb_scores(sums, n_sel, total, alpha: float = 1000.0,

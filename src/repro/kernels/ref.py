@@ -73,7 +73,9 @@ def truncnorm_times_ref(u2, mu_theta, mu_gamma, n_samples, eta, model_bits,
 
 def bandit_round_ref(state, cand_idx, t_ud, t_ul, rand, hyper, *,
                      policy: str, s_round: int, decay: float = 1.0,
-                     sliced: bool = False):
+                     sliced: bool = False, fault: tuple | None = None,
+                     deadline: float | None = None,
+                     fault_u=None):
     """One fused bandit round (score -> select -> schedule -> observe) on a
     core.bandit_jax.BanditState — the jnp oracle of
     kernels/bandit_round.py and the CPU fast path.
@@ -93,6 +95,13 @@ def bandit_round_ref(state, cand_idx, t_ud, t_ul, rand, hyper, *,
     exists — the schedule runs on slot-gathered values
     (``schedule_gathered``) and ``observe`` scatters them back through
     ``cand_idx``.
+
+    ``deadline`` compiles in the failure-aware layer
+    (``core.bandit_jax.censor_slots``; ``fault``: static (crash, churn,
+    corrupt) triple, ``fault_u``: the caller-drawn [3, S] uniforms): the
+    round then returns ``(new_state, sel, round_time, flags)`` with failed
+    slots' observations censored at the deadline.  At the default (None)
+    nothing changes, bitwise.
     """
     from repro.core import bandit_jax
 
@@ -130,9 +139,18 @@ def bandit_round_ref(state, cand_idx, t_ud, t_ul, rand, hyper, *,
         sud, sul = t_ud[safe_slot], t_ul[safe_slot]
     else:
         sud, sul = t_ud[safe], t_ul[safe]
-    round_time, incs = bandit_jax.schedule_gathered(valid, sud, sul)
-    state = bandit_jax.observe(state, sel, sud, sul, incs, decay=decay)
-    return state, sel, round_time
+    if deadline is None:
+        round_time, incs = bandit_jax.schedule_gathered(valid, sud, sul)
+        state = bandit_jax.observe(state, sel, sud, sul, incs, decay=decay)
+        return state, sel, round_time
+    round_time, incs, finish = bandit_jax.schedule_completions(valid, sud,
+                                                               sul)
+    obs_ud, obs_ul, obs_inc, fail, flags, round_time = \
+        bandit_jax.censor_slots(valid, sud, sul, incs, finish, round_time,
+                                fault_u, fault, deadline)
+    state = bandit_jax.observe(state, sel, obs_ud, obs_ul, obs_inc,
+                               decay=decay, fail=fail)
+    return state, sel, round_time, flags
 
 
 def rg_lru_ref(a, b):

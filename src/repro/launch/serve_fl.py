@@ -77,16 +77,26 @@ def run_serving(scenario: str | Scenario = "paper-baseline",
     state = None
     t0 = 0
     if mgr is not None and resume and mgr.latest_step() is not None:
-        step, snap = mgr.restore()
-        saved_meta = snap.get("meta", {})
-        if saved_meta != meta:
-            raise ValueError(
-                f"checkpoint at step {step} in {ckpt_dir} belongs to a "
-                f"different run (saved {saved_meta}, requested {meta}); "
-                "pass --fresh / resume=False or a new --ckpt-dir")
-        state = async_engine.state_from_snapshot(snap[_STATE_KEY])
-        t0 = int(state.tick)
-        log(f"[serve_fl] resumed from checkpoint step {step} (tick {t0})")
+        # restore() skips checkpoints whose checksums fail and falls back
+        # to the newest valid one — a crash mid-checkpoint (or a truncated
+        # file) costs at most one segment, never the run
+        try:
+            step, snap = mgr.restore()
+        except FileNotFoundError:
+            log(f"[serve_fl] no valid checkpoint in {ckpt_dir} "
+                f"(all corrupt?) — starting fresh")
+            step, snap = None, None
+        if snap is not None:
+            saved_meta = snap.get("meta", {})
+            if saved_meta != meta:
+                raise ValueError(
+                    f"checkpoint at step {step} in {ckpt_dir} belongs to a "
+                    f"different run (saved {saved_meta}, requested {meta}); "
+                    "pass --fresh / resume=False or a new --ckpt-dir")
+            state = async_engine.state_from_snapshot(snap[_STATE_KEY])
+            t0 = int(state.tick)
+            log(f"[serve_fl] resumed from checkpoint step {step} "
+                f"(tick {t0})")
 
     wall0 = time.time()
     done = t0
@@ -107,7 +117,8 @@ def run_serving(scenario: str | Scenario = "paper-baseline",
         log(f"[serve_fl] tick {done}/{ticks}  sim_t={float(state.now):.1f}  "
             f"admitted={int(state.n_admitted)} "
             f"aggregated={int(state.n_aggregated)} "
-            f"dropped={int(state.n_dropped)}")
+            f"dropped={int(state.n_dropped)} "
+            f"failed={int(state.n_failed)}")
     wall = time.time() - wall0
 
     return {
@@ -116,6 +127,8 @@ def run_serving(scenario: str | Scenario = "paper-baseline",
         "admitted": int(state.n_admitted),
         "aggregated": int(state.n_aggregated),
         "dropped": int(state.n_dropped),
+        "failed": int(state.n_failed),
+        "corrupt": int(state.n_corrupt),
         "buffered": int(np.asarray(
             jax.device_get(state.buf_client) >= 0).sum()),
         "wall_s": wall,
@@ -148,6 +161,11 @@ def main(argv=None) -> None:
     ap.add_argument("--arrival", choices=["poisson", "full"],
                     default="poisson")
     ap.add_argument("--arrival-rate", type=float, default=5.0)
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-dispatch deadline in seconds; compiles in "
+                         "the failure-aware layer (default: off)")
+    ap.add_argument("--backoff-base", type=float, default=2.0)
+    ap.add_argument("--backoff-max", type=float, default=64.0)
     ap.add_argument("--max-segments", type=int, default=None,
                     help="stop after N segments (restart smoke tests)")
     args = ap.parse_args(argv)
@@ -156,7 +174,8 @@ def main(argv=None) -> None:
         n_slots=args.n_slots, buffer_size=args.buffer_size,
         max_staleness=args.max_staleness, s_dispatch=args.s_dispatch,
         n_req=args.n_req, tick_dt=args.tick_dt, arrival=args.arrival,
-        arrival_rate=args.arrival_rate)
+        arrival_rate=args.arrival_rate, deadline=args.deadline,
+        backoff_base=args.backoff_base, backoff_max=args.backoff_max)
     out = run_serving(
         args.scenario, args.policy, ticks=args.ticks, segment=args.segment,
         ckpt_dir=args.ckpt_dir, seed=args.seed, n_clients=args.n_clients,
@@ -165,7 +184,7 @@ def main(argv=None) -> None:
     print(f"[serve_fl] done: {out['ticks']} ticks, "
           f"sim_time={out['sim_time']:.1f}, "
           f"aggregated={out['aggregated']}, dropped={out['dropped']}, "
-          f"{out['ticks_per_s']:.0f} ticks/s")
+          f"failed={out['failed']}, {out['ticks_per_s']:.0f} ticks/s")
 
 
 if __name__ == "__main__":

@@ -86,6 +86,17 @@ class AsyncConfig:
     FedBuff aggregation weight ``(1 + staleness)**-p`` consumed by the
     learning-coupled twin (fl/engine.async_accuracy_run); the time-only
     engine only counts.
+
+    ``deadline`` (seconds, None = off) compiles in the failure-aware
+    layer: a dispatched update that crashes, churns mid-upload (the
+    scenario's ``FaultModel``) or would finish past ``deadline`` instead
+    *times out* at ``now + deadline`` — the bandit observes the censored
+    times (core.bandit_jax.censor_slots), the slot frees without
+    aggregating, and the client enters a capped exponential backoff
+    (``backoff_base * 2**(streak-1)`` seconds, capped at ``backoff_max``)
+    before it can be polled — and therefore re-dispatched — again; a
+    success resets its streak.  At None the layer compiles away and the
+    tick is bitwise the pre-failure-aware one.
     """
 
     n_slots: int = 32
@@ -98,8 +109,18 @@ class AsyncConfig:
     arrival: str = "poisson"
     arrival_rate: float = 5.0
     staleness_power: float = 0.5
+    deadline: float | None = None
+    backoff_base: float = 2.0
+    backoff_max: float = 64.0
 
     def __post_init__(self):
+        if self.deadline is not None and not self.deadline > 0.0:
+            raise ValueError("deadline must be a positive round duration "
+                             f"in seconds (or None), got {self.deadline}")
+        if not self.backoff_base > 0.0 or self.backoff_max < \
+                self.backoff_base:
+            raise ValueError("backoff must satisfy 0 < backoff_base <= "
+                             "backoff_max")
         if self.n_slots < self.s_dispatch:
             raise ValueError(f"n_slots={self.n_slots} < "
                              f"s_dispatch={self.s_dispatch}: a full cohort "
@@ -136,13 +157,18 @@ class AsyncState:
     buf_ud: jnp.ndarray         # [B] f32 realized t_UD
     buf_ul: jnp.ndarray         # [B] f32 realized t_UL
     buf_inc: jnp.ndarray        # [B] f32 realized T_inc observation
+    buf_flag: jnp.ndarray       # [B] int32 bandit_jax.FLAG_* (failure layer)
     mean_theta: jnp.ndarray     # [K] f32 churn-evolving mean throughput
     mean_gamma: jnp.ndarray     # [K] f32 churn-evolving mean capability
+    fail_streak: jnp.ndarray    # [K] int32 consecutive delivery failures
+    backoff_until: jnp.ndarray  # [K] f32 not pollable before this time
     now: jnp.ndarray            # [] f32 server clock
     tick: jnp.ndarray           # [] int32 next tick index (0-based)
     n_admitted: jnp.ndarray     # [] int32 cumulative dispatched updates
     n_aggregated: jnp.ndarray   # [] int32 cumulative aggregated updates
     n_dropped: jnp.ndarray      # [] int32 cumulative over-stale evictions
+    n_failed: jnp.ndarray       # [] int32 cumulative crash/churn/deadline
+    n_corrupt: jnp.ndarray      # [] int32 cumulative corrupted arrivals
 
     @staticmethod
     def create(env: engine_jax.EnvArrays, cfg: AsyncConfig) -> "AsyncState":
@@ -154,10 +180,14 @@ class AsyncState:
             buf_client=jnp.full(b, -1, jnp.int32),
             buf_done=zf(), buf_tick=jnp.zeros(b, jnp.int32),
             buf_ud=zf(), buf_ul=zf(), buf_inc=zf(),
+            buf_flag=jnp.zeros(b, jnp.int32),
             mean_theta=env.mean_theta, mean_gamma=env.mean_gamma,
+            fail_streak=jnp.zeros(k, jnp.int32),
+            backoff_until=jnp.zeros(k, jnp.float32),
             now=jnp.float32(0), tick=jnp.int32(0),
             n_admitted=jnp.int32(0), n_aggregated=jnp.int32(0),
-            n_dropped=jnp.int32(0))
+            n_dropped=jnp.int32(0), n_failed=jnp.int32(0),
+            n_corrupt=jnp.int32(0))
 
     def replace(self, **kw) -> "AsyncState":
         return dataclasses.replace(self, **kw)
@@ -210,24 +240,33 @@ def dispatch_plan(state: AsyncState, cand_mask: jnp.ndarray,
     return sel, target, finish, rt, incs, n_disp
 
 
-def admit(state: AsyncState, sel, target, finish, incs, t_ud, t_ul
-          ) -> AsyncState:
-    """Scatter the planned cohort into its buffer slots (phase 1b)."""
+def admit(state: AsyncState, sel, target, finish, incs, t_ud, t_ul,
+          ud=None, ul=None, flags=None) -> AsyncState:
+    """Scatter the planned cohort into its buffer slots (phase 1b).
+
+    ``ud``/``ul`` (per-cohort-slot) override the ``t_ud[sel]`` gather —
+    the failure layer stores *censored* observations for failed slots —
+    and ``flags`` stamps each slot's FLAG_* outcome (zeros when absent)."""
     valid = sel >= 0
     safe = jnp.where(valid, sel, 0)
+    ud = t_ud[safe] if ud is None else ud
+    ul = t_ul[safe] if ul is None else ul
+    flags = jnp.zeros_like(sel) if flags is None else flags
     return state.replace(
         buf_client=state.buf_client.at[target].set(sel, mode="drop"),
         buf_done=state.buf_done.at[target].set(state.now + finish,
                                                mode="drop"),
         buf_tick=state.buf_tick.at[target].set(state.tick, mode="drop"),
-        buf_ud=state.buf_ud.at[target].set(t_ud[safe], mode="drop"),
-        buf_ul=state.buf_ul.at[target].set(t_ul[safe], mode="drop"),
+        buf_ud=state.buf_ud.at[target].set(ud, mode="drop"),
+        buf_ul=state.buf_ul.at[target].set(ul, mode="drop"),
         buf_inc=state.buf_inc.at[target].set(incs, mode="drop"),
+        buf_flag=state.buf_flag.at[target].set(
+            jnp.maximum(flags, 0), mode="drop"),
         n_admitted=state.n_admitted + valid.sum().astype(jnp.int32))
 
 
 def completion_plan(state: AsyncState, now: jnp.ndarray,
-                    cfg: AsyncConfig):
+                    cfg: AsyncConfig, failed=None):
     """Phase 2 of a tick: decide which slots aggregate, drop, or wait.
 
     ``now`` is the post-advance clock.  Staleness of a slot is
@@ -236,15 +275,27 @@ def completion_plan(state: AsyncState, now: jnp.ndarray,
     completed slots the first ``buffer_size`` in slot order aggregate.
     Returns ``(agg_slots [buffer_size] (-1 padded in client terms via
     fill=n_slots), agg_mask [B], drop_mask [B], staleness [B])``.
+
+    ``failed`` ([B] bool, failure layer) marks slots whose update will
+    never arrive (crash/churn/deadline): once their timeout passes they
+    are *failed completions* — excluded from the aggregation quota but
+    still observed (censored) — returned as a fifth ``fail_mask`` output.
+    Staleness eviction wins over failure timeout (the masks are disjoint).
     """
     occupied = state.buf_client >= 0
     staleness = state.tick - state.buf_tick
     drop_mask = occupied & (staleness > cfg.max_staleness)
     ready = occupied & (state.buf_done <= now) & ~drop_mask
+    fail_mask = None
+    if failed is not None:
+        fail_mask = ready & failed
+        ready = ready & ~failed
     rank = jnp.cumsum(ready.astype(jnp.int32)) - 1
     agg_mask = ready & (rank < cfg.buffer_size)
     agg_slots = jnp.nonzero(agg_mask, size=cfg.buffer_size,
                             fill_value=cfg.n_slots)[0].astype(jnp.int32)
+    if failed is not None:
+        return agg_slots, agg_mask, drop_mask, staleness, fail_mask
     return agg_slots, agg_mask, drop_mask, staleness
 
 
@@ -310,34 +361,109 @@ def _tick_fn(scen: Scenario, env: engine_jax.EnvArrays, cfg: AsyncConfig,
              *, policy: str, eta, model_bits, hyper, fluctuate: bool):
     """Build the per-tick transition ``tick(state, kk) -> (state, trace)``.
     ``kk`` is this tick's key dict (streams: cand/theta/gamma/pol/cong/
-    churn shared bit-for-bit with the sync engines, plus arr)."""
+    churn shared bit-for-bit with the sync engines, plus arr).
+
+    ``cfg.deadline`` (static) compiles in the failure-aware layer; at None
+    every failure branch below folds away and the tick is bitwise the
+    fault-free transition."""
     select_fn = bandit_jax.make_select_fn(policy, cfg.s_dispatch)
     decay = bandit_jax.policy_decay(policy)
+    failure = cfg.deadline is not None
+    fault = bandit_jax.resolve_fault(scen.fault, cfg.deadline)
+    k = env.mean_theta.shape[0]
 
     def tick(state: AsyncState, kk):
         t_ud, t_ul, cand_mask, n_arr = poll_inputs(
             scen, env, cfg, state, kk, eta=eta, model_bits=model_bits,
             fluctuate=fluctuate)
+        if failure:     # clients cooling down after a failure: not pollable
+            cand_mask = cand_mask & (state.backoff_until <= state.now)
 
         sel, target, finish, rt, incs, _n_disp = dispatch_plan(
             state, cand_mask, kk["pol"], t_ud, t_ul, n_arr, hyper,
             select_fn, cfg)
-        state = admit(state, sel, target, finish, incs, t_ud, t_ul)
+        if failure:
+            # the same per-tick policy key the sync engines derive the
+            # fault stream from (bandit_jax.FAULT_STREAM_TAG)
+            fu = (bandit_jax.fault_uniforms(kk["pol"], cfg.s_dispatch)
+                  if fault is not None else None)
+            valid = sel >= 0
+            safe = jnp.where(valid, sel, 0)
+            obs_ud, obs_ul, obs_inc, fail, flags, rt = \
+                bandit_jax.censor_slots(valid, t_ud[safe], t_ul[safe], incs,
+                                        finish, rt, fu, fault, cfg.deadline)
+            # a failed update never arrives: its slot times out — and
+            # frees for re-dispatch — at the deadline
+            finish = jnp.where(fail, jnp.float32(cfg.deadline), finish)
+            state = admit(state, sel, target, finish, obs_inc, t_ud, t_ul,
+                          ud=obs_ud, ul=obs_ul, flags=flags)
+        else:
+            state = admit(state, sel, target, finish, incs, t_ud, t_ul)
 
         dt = advance_clock(state, sel, rt, cfg)
         now = state.now + dt
 
-        agg_slots, agg_mask, drop_mask, staleness = completion_plan(
-            state, now, cfg)
-        idx, ud_o, ul_o, inc_o = gather_aggregated(state, agg_slots, cfg)
-        bandit = bandit_jax.observe(state.bandit, idx, ud_o, ul_o, inc_o,
-                                    decay=decay)
+        if failure:
+            failed_slot = ((state.buf_flag >= bandit_jax.FLAG_CRASH)
+                           & (state.buf_flag <= bandit_jax.FLAG_DEADLINE))
+            agg_slots, agg_mask, drop_mask, staleness, fail_mask = \
+                completion_plan(state, now, cfg, failed=failed_slot)
+            fail_slots = jnp.nonzero(fail_mask, size=cfg.n_slots,
+                                     fill_value=cfg.n_slots)[0].astype(
+                                         jnp.int32)
+            # ONE observe call per tick (decay applies once): arrived
+            # slots uncensored — a corrupt upload's *timing* is real, its
+            # payload is the aggregation guard's problem — plus failed
+            # completions censored at the deadline
+            idx_a, ud_a, ul_a, inc_a = gather_aggregated(state, agg_slots,
+                                                         cfg)
+            idx_f, ud_f, ul_f, inc_f = gather_aggregated(state, fail_slots,
+                                                         cfg)
+            idx = jnp.concatenate([idx_a, idx_f])
+            bandit = bandit_jax.observe(
+                state.bandit, idx, jnp.concatenate([ud_a, ud_f]),
+                jnp.concatenate([ul_a, ul_f]),
+                jnp.concatenate([inc_a, inc_f]), decay=decay,
+                fail=jnp.concatenate([jnp.zeros_like(idx_a, bool),
+                                      jnp.ones_like(idx_f, bool)]))
+        else:
+            agg_slots, agg_mask, drop_mask, staleness = completion_plan(
+                state, now, cfg)
+            fail_mask = jnp.zeros_like(agg_mask)
+            idx, ud_o, ul_o, inc_o = gather_aggregated(state, agg_slots,
+                                                       cfg)
+            bandit = bandit_jax.observe(state.bandit, idx, ud_o, ul_o,
+                                        inc_o, decay=decay)
 
         n_agg = agg_mask.sum().astype(jnp.int32)
         n_drop = drop_mask.sum().astype(jnp.int32)
-        clear = agg_mask | drop_mask
+        n_fail = fail_mask.sum().astype(jnp.int32)
+        n_corr = (agg_mask & (state.buf_flag
+                              == bandit_jax.FLAG_CORRUPT)).sum().astype(
+                                  jnp.int32)
+        clear = agg_mask | drop_mask | fail_mask
         buf_client = jnp.where(clear, -1, state.buf_client)
         agg_staleness = jnp.where(agg_mask, staleness, -1)
+
+        fail_streak = state.fail_streak
+        backoff_until = state.backoff_until
+        if failure:
+            # arrived => streak resets; failed => streak += 1 and the
+            # client backs off min(base * 2**(streak-1), max) seconds (a
+            # client is in flight at most once, so the scatters are
+            # disjoint)
+            arrived_c = jnp.where(agg_mask, state.buf_client, k)
+            failed_c = jnp.where(fail_mask, state.buf_client, k)
+            new_streak = state.fail_streak[
+                jnp.where(fail_mask, state.buf_client, 0)] + 1
+            delay = jnp.minimum(
+                cfg.backoff_base
+                * jnp.exp2(new_streak.astype(jnp.float32) - 1.0),
+                cfg.backoff_max)
+            fail_streak = fail_streak.at[arrived_c].set(
+                0, mode="drop").at[failed_c].set(new_streak, mode="drop")
+            backoff_until = backoff_until.at[failed_c].set(now + delay,
+                                                           mode="drop")
 
         mean_theta, mean_gamma = state.mean_theta, state.mean_gamma
         if scen.churn_prob > 0.0:
@@ -347,13 +473,17 @@ def _tick_fn(scen: Scenario, env: engine_jax.EnvArrays, cfg: AsyncConfig,
         state = state.replace(
             bandit=bandit, buf_client=buf_client,
             mean_theta=mean_theta, mean_gamma=mean_gamma,
+            fail_streak=fail_streak, backoff_until=backoff_until,
             now=now, tick=state.tick + 1,
             n_aggregated=state.n_aggregated + n_agg,
-            n_dropped=state.n_dropped + n_drop)
+            n_dropped=state.n_dropped + n_drop,
+            n_failed=state.n_failed + n_fail,
+            n_corrupt=state.n_corrupt + n_corr)
         trace = {
             "dt": dt, "now": now, "selected": sel,
             "admitted": (sel >= 0).sum().astype(jnp.int32),
-            "aggregated": n_agg, "dropped": n_drop,
+            "aggregated": n_agg, "dropped": n_drop, "failed": n_fail,
+            "corrupt": n_corr,
             "buffered": (buf_client >= 0).sum().astype(jnp.int32),
             "max_staleness": jnp.max(agg_staleness),
         }
@@ -407,16 +537,21 @@ class AsyncResult:
     admitted: np.ndarray
     aggregated: np.ndarray
     dropped: np.ndarray
+    failed: np.ndarray          # crash/churn/deadline timeouts (censored)
+    corrupt: np.ndarray         # arrived-but-garbage (subset of aggregated)
     buffered: np.ndarray
     max_staleness: np.ndarray
     state: AsyncState
 
     def conserved(self) -> bool:
-        """admitted == aggregated + dropped + still-buffered, cumulatively
-        at every tick (invariant (b))."""
+        """admitted == aggregated + dropped + failed + still-buffered,
+        cumulatively at every tick (invariant (b)); ``corrupt`` is a
+        sub-count of ``aggregated`` (the payload is garbage but the
+        arrival is real)."""
         return bool(np.all(np.cumsum(self.admitted)
                            == np.cumsum(self.aggregated)
-                           + np.cumsum(self.dropped) + self.buffered))
+                           + np.cumsum(self.dropped)
+                           + np.cumsum(self.failed) + self.buffered))
 
 
 def run_segment(state: AsyncState, keys: dict, scen: Scenario,
@@ -460,6 +595,15 @@ def serve(scenario: str | Scenario = "paper-baseline",
     if env is None:
         env = engine_jax.EnvArrays.from_scenario(
             scen, scen.build_env(n_clients, np.random.default_rng(env_seed)))
+    k = int(env.mean_theta.shape[0])
+    if cfg.s_dispatch > k:
+        raise ValueError(f"s_dispatch={cfg.s_dispatch} exceeds "
+                         f"n_clients={k}: cannot dispatch more clients "
+                         f"than exist")
+    if policy not in bandit_jax.POLICY_NAMES:
+        raise ValueError(f"unknown policy {policy!r}; choose from "
+                         f"{bandit_jax.POLICY_NAMES}")
+    bandit_jax.resolve_fault(scen.fault, cfg.deadline)  # validates the combo
     if hyper is None:
         hyper = bandit_jax.DEFAULT_HYPERS[policy]
     if total_ticks is None:
@@ -477,7 +621,8 @@ def serve(scenario: str | Scenario = "paper-baseline",
     return AsyncResult(
         dt=tr["dt"], elapsed=tr["now"], selected=tr["selected"],
         admitted=tr["admitted"], aggregated=tr["aggregated"],
-        dropped=tr["dropped"], buffered=tr["buffered"],
+        dropped=tr["dropped"], failed=tr["failed"], corrupt=tr["corrupt"],
+        buffered=tr["buffered"],
         max_staleness=tr["max_staleness"], state=state)
 
 

@@ -171,17 +171,35 @@ def _switch_select(policy_idx, s_round: int):
     return select
 
 
-def _round(state, cand_mask, t_ud, t_ul, select_fn, hyper, key, decay=1.0):
+def _round(state, cand_mask, t_ud, t_ul, select_fn, hyper, key, decay=1.0,
+           fault=None, deadline=None):
     """One protocol round given this round's candidates and true times.
     ``decay`` is the per-round discount of the state's decayed statistics
-    (bandit_jax.policy_decay)."""
+    (bandit_jax.policy_decay).  ``deadline`` compiles in the failure-aware
+    layer (``fault``: static probability triple or None): the fault stream
+    derives from ``key`` via bandit_jax.FAULT_STREAM_TAG — the identical
+    draw the fused round makes from the same per-round key, so fused and
+    unfused sweeps stay bitwise under faults — and the round returns a
+    fourth per-slot ``flags`` output."""
     sel = select_fn(state, cand_mask, key, t_ud, t_ul, hyper)
-    round_time, incs = _schedule(sel, t_ud, t_ul)
     valid = sel >= 0
     safe = jnp.where(valid, sel, 0)
-    state = bandit_jax.observe(state, sel, t_ud[safe], t_ul[safe], incs,
-                               decay=decay)
-    return state, round_time, sel
+    if deadline is None:
+        round_time, incs = _schedule(sel, t_ud, t_ul)
+        state = bandit_jax.observe(state, sel, t_ud[safe], t_ul[safe], incs,
+                                   decay=decay)
+        return state, round_time, sel
+    fu = (bandit_jax.fault_uniforms(key, sel.shape[0])
+          if fault is not None else None)
+    sud, sul = t_ud[safe], t_ul[safe]
+    round_time, incs, finish = bandit_jax.schedule_completions(valid, sud,
+                                                               sul)
+    obs_ud, obs_ul, obs_inc, fail, flags, round_time = \
+        bandit_jax.censor_slots(valid, sud, sul, incs, finish, round_time,
+                                fu, fault, deadline)
+    state = bandit_jax.observe(state, sel, obs_ud, obs_ul, obs_inc,
+                               decay=decay, fail=fail)
+    return state, round_time, sel, flags
 
 
 # ---------------------------------------------------------------------------
@@ -418,9 +436,12 @@ def _run_one(env: EnvArrays, model_bits, hyper, eta, seed,
              *, policy: str, scen: Scenario, n_rounds: int, s_round: int,
              n_req: int, fluctuate: bool, chunk_rounds: int | None = None,
              client_mesh=None, fused: bool = True,
-             fast_sampling: bool = True):
+             fast_sampling: bool = True, deadline: float | None = None):
     """One grid point: the full protocol over rounds.  Returns [R] round
-    times.  ``policy`` and the scenario dynamics are static — the sweep
+    times — or ``([R] round times, [R, S] flags)`` with the failure layer
+    on (``deadline`` set; the scenario's FaultModel supplies the static
+    fault probabilities).  ``policy`` and the scenario dynamics are static
+    — the sweep
     unrolls the policy axis so each compiled branch runs only its own
     selection rule, and switched-off dynamics are compiled away entirely.
 
@@ -467,17 +488,22 @@ def _run_one(env: EnvArrays, model_bits, hyper, eta, seed,
         raise ValueError(f"n_rounds={n_rounds} not divisible by "
                          f"chunk_rounds={c}")
     n_chunks = n_rounds // c
+    # failure layer (static): active iff a deadline is set; fault draws come
+    # from the scenario's FaultModel (resolve_fault re-validates the pair)
+    failure = deadline is not None
+    fault = bandit_jax.resolve_fault(scen.fault, deadline)
     state0 = _client_constrain(bandit_jax.BanditState.create(k), client_mesh)
     k_cand, k_theta, k_gamma, k_pol, k_cong, k_churn = jax.random.split(
         jax.random.PRNGKey(seed), 6)
 
     if fused:
-        round_fn = bandit_jax.make_round_fn(policy, s_round)
+        round_fn = bandit_jax.make_round_fn(policy, s_round, fault=fault,
+                                            deadline=deadline)
 
         def one_round(state, cand, t_ud_r, t_ul_r, kp):
-            state, _sel, round_time = round_fn(state, cand, kp, t_ud_r,
-                                               t_ul_r, hyper)
-            return state, round_time
+            out = round_fn(state, cand, kp, t_ud_r, t_ul_r, hyper)
+            # (state, sel, rt[, flags]) -> (state, rt | (rt, flags))
+            return out[0], ((out[2], out[3]) if failure else out[2])
 
         def round_cands(keys):
             # sorted indices, not masks — the fused round's encoding
@@ -487,10 +513,10 @@ def _run_one(env: EnvArrays, model_bits, hyper, eta, seed,
         decay = bandit_jax.policy_decay(policy)
 
         def one_round(state, cand, t_ud_r, t_ul_r, kp):
-            state, round_time, _sel = _round(state, cand, t_ud_r, t_ul_r,
-                                             select_fn, hyper, kp,
-                                             decay=decay)
-            return state, round_time
+            out = _round(state, cand, t_ud_r, t_ul_r, select_fn, hyper, kp,
+                         decay=decay, fault=fault, deadline=deadline)
+            # (state, rt, sel[, flags]) -> (state, rt | (rt, flags))
+            return out[0], ((out[1], out[3]) if failure else out[1])
 
         def round_cands(keys):
             return _client_constrain(_cand_masks_from_keys(keys, k, n_req),
@@ -503,10 +529,18 @@ def _run_one(env: EnvArrays, model_bits, hyper, eta, seed,
     rounds = jnp.arange(1, n_rounds + 1, dtype=jnp.int32).reshape(
         n_chunks, c)
 
+    def _shape_out(outs):
+        """Flatten the chunked scan outputs back to round-major shapes."""
+        if failure:
+            rts, flags = outs
+            return rts.reshape(n_rounds), flags.reshape(n_rounds, s_round)
+        return outs.reshape(n_rounds)
+
     if fast_sampling:
         if fused:
             sampled_fn = bandit_jax.make_sampled_round_fn(
-                policy, s_round, fluctuate=fluctuate)
+                policy, s_round, fluctuate=fluctuate, fault=fault,
+                deadline=deadline)
 
         def fast_chunk_body(carry, xs):
             state, mean_theta, mean_gamma = carry
@@ -519,31 +553,35 @@ def _run_one(env: EnvArrays, model_bits, hyper, eta, seed,
                 cand, mult, k_t, kp, kc = x
                 mu_t = _client_constrain(m_theta * mult, client_mesh)
                 if fused:
-                    state, _sel, rt = sampled_fn(
+                    out = sampled_fn(
                         state, cand, kp, k_t, mu_t, m_gamma, env.n_samples,
                         eta, model_bits, hyper)
+                    state, obs = out[0], ((out[2], out[3]) if failure
+                                          else out[2])
                 else:
                     t_ud_c, t_ul_c = sample_times_candidates(
                         k_t, cand, env.n_samples, mu_t, m_gamma, eta,
                         model_bits, fluctuate=fluctuate)
                     t_ud, t_ul, mask = bandit_jax.scatter_cand_times(
                         cand, t_ud_c, t_ul_c, k)
-                    state, rt, _sel = _round(state, mask, t_ud, t_ul,
-                                             select_fn, hyper, kp,
-                                             decay=decay)
+                    out = _round(state, mask, t_ud, t_ul, select_fn, hyper,
+                                 kp, decay=decay, fault=fault,
+                                 deadline=deadline)
+                    state, obs = out[0], ((out[1], out[3]) if failure
+                                          else out[1])
                 if scen.churn_prob > 0.0:
                     m_theta, m_gamma = churn_step(kc, m_theta, m_gamma,
                                                   scen.churn_prob)
-                return (state, m_theta, m_gamma), rt
+                return (state, m_theta, m_gamma), obs
 
-            carry2, round_times = jax.lax.scan(
+            carry2, outs = jax.lax.scan(
                 step, (state, mean_theta, mean_gamma),
                 (cands, thr_mult, kk["theta"], kk["pol"], kk["churn"]))
-            return carry2, round_times
+            return carry2, outs
 
         carry0 = (state0, env.mean_theta, env.mean_gamma)
-        _, round_times = jax.lax.scan(fast_chunk_body, carry0, (keys, rounds))
-        return round_times.reshape(n_rounds)
+        _, outs = jax.lax.scan(fast_chunk_body, carry0, (keys, rounds))
+        return _shape_out(outs)
 
     def chunk_body(carry, xs):
         state, mean_theta, mean_gamma = carry
@@ -562,9 +600,9 @@ def _run_one(env: EnvArrays, model_bits, hyper, eta, seed,
             def step(state, x):
                 cand, t_ud_r, t_ul_r, kp = x
                 return one_round(state, cand, t_ud_r, t_ul_r, kp)
-            state, round_times = jax.lax.scan(
+            state, outs = jax.lax.scan(
                 step, state, (cands, t_ud, t_ul, kk["pol"]))
-            return (state, mean_theta, mean_gamma), round_times
+            return (state, mean_theta, mean_gamma), outs
 
         # churn: client means evolve between rounds, sample in the scan
         def step(carry2, x):
@@ -573,30 +611,30 @@ def _run_one(env: EnvArrays, model_bits, hyper, eta, seed,
             t_ud, t_ul = sample_times(env.n_samples, m_theta * mult,
                                       m_gamma, eta, model_bits, k_t, k_g,
                                       fluctuate=fluctuate)
-            state, round_time = one_round(state, cand, t_ud, t_ul, kp)
+            state, obs = one_round(state, cand, t_ud, t_ul, kp)
             m_theta, m_gamma = churn_step(kc, m_theta, m_gamma,
                                           scen.churn_prob)
-            return (state, m_theta, m_gamma), round_time
+            return (state, m_theta, m_gamma), obs
 
-        carry2, round_times = jax.lax.scan(
+        carry2, outs = jax.lax.scan(
             step, (state, mean_theta, mean_gamma),
             (cands, thr_mult, kk["theta"], kk["gamma"], kk["pol"],
              kk["churn"]))
-        return carry2, round_times
+        return carry2, outs
 
     carry0 = (state0, env.mean_theta, env.mean_gamma)
-    _, round_times = jax.lax.scan(chunk_body, carry0, (keys, rounds))
-    return round_times.reshape(n_rounds)
+    _, outs = jax.lax.scan(chunk_body, carry0, (keys, rounds))
+    return _shape_out(outs)
 
 
 @functools.partial(jax.jit, static_argnames=(
     "policies", "scen", "n_rounds", "s_round", "n_req", "fluctuate",
-    "chunk_rounds", "mesh", "shard", "fused", "fast_sampling"),
+    "chunk_rounds", "mesh", "shard", "fused", "fast_sampling", "deadline"),
     donate_argnames=("eta", "seed"))
 def _run_grid(env: EnvArrays, model_bits, hypers, eta, seed,
               *, policies: tuple[str, ...], scen: Scenario, n_rounds,
               s_round, n_req, fluctuate, chunk_rounds=None, mesh=None,
-              shard="grid", fused=True, fast_sampling=True):
+              shard="grid", fused=True, fast_sampling=True, deadline=None):
     """One jit call for the whole sweep: the policy axis is unrolled
     statically (each entry vmaps its own selection rule over the flattened
     [E*S] eta/seed axes); hypers: [P], eta/seed: [E*S], donated.
@@ -615,11 +653,14 @@ def _run_grid(env: EnvArrays, model_bits, hypers, eta, seed,
                               n_req=n_req, fluctuate=fluctuate,
                               chunk_rounds=chunk_rounds,
                               client_mesh=client_mesh, fused=fused,
-                              fast_sampling=fast_sampling)
+                              fast_sampling=fast_sampling, deadline=deadline)
         g = jax.vmap(f, in_axes=(None, None, None, 0, 0))
         if mesh is not None and shard == "grid":
             g = dist_sharding.shard_vmapped(g, mesh, sharded_argnums=(3, 4))
         out.append(g(env, model_bits, hypers[i], eta, seed))
+    if deadline is not None:       # ([P, E*S, R] times, [P, E*S, R, S] flags)
+        return (jnp.stack([o[0] for o in out]),
+                jnp.stack([o[1] for o in out]))
     return jnp.stack(out)          # [P, E*S(_padded), R]
 
 
@@ -632,6 +673,9 @@ class SweepResult:
     etas: tuple[float, ...]
     seeds: tuple[int, ...]
     round_times: np.ndarray     # [P, E, S, R]
+    # per-slot outcome flags (core.bandit_jax.FLAG_*) when the sweep ran
+    # with a round deadline; None on fault-free sweeps
+    flags: np.ndarray | None = None    # [P, E, S, R, s_round] int32
 
     @property
     def elapsed(self) -> np.ndarray:
@@ -641,6 +685,24 @@ class SweepResult:
     def mean_elapsed(self) -> np.ndarray:
         """Seed-averaged elapsed time, [P, E] (paper Figs. 1-2 input)."""
         return self.elapsed.mean(axis=-1)
+
+    def fault_counts(self) -> dict[str, np.ndarray]:
+        """Per-grid-point outcome totals over all rounds/slots, [P, E, S]
+        per category.  The categories partition every dispatched slot
+        (dispatched = ok + crashed + churned + deadline_missed + corrupt —
+        the conservation invariant the property tests assert); requires a
+        failure-aware sweep (``deadline`` set)."""
+        if self.flags is None:
+            raise ValueError("fault_counts() requires a sweep run with a "
+                             "deadline (the failure-aware layer)")
+        f = self.flags
+        cat = {"ok": bandit_jax.FLAG_OK, "crashed": bandit_jax.FLAG_CRASH,
+               "churned": bandit_jax.FLAG_CHURN,
+               "deadline_missed": bandit_jax.FLAG_DEADLINE,
+               "corrupt": bandit_jax.FLAG_CORRUPT}
+        out = {k: (f == v).sum(axis=(-2, -1)) for k, v in cat.items()}
+        out["dispatched"] = (f >= 0).sum(axis=(-2, -1))
+        return out
 
 
 def resolve_sweep_mesh(devices) -> "jax.sharding.Mesh | None":
@@ -666,6 +728,7 @@ def sweep(scenario: Scenario | str = "paper-baseline",
           env_seed: int = 0,
           fluctuate: bool = True,
           *,
+          deadline: float | None = None,
           devices=None,
           shard: str = "grid",
           chunk_rounds: int | None = None,
@@ -677,6 +740,18 @@ def sweep(scenario: Scenario | str = "paper-baseline",
     policy's scalar knob (alpha / beta), so hyper-parameter sweeps just list
     the same policy several times.  ``seeds`` is an int (=> range) or an
     explicit sequence.
+
+    ``deadline`` (seconds, None = off) compiles in the failure-aware round
+    layer: dispatched clients that crash, churn mid-upload (the scenario's
+    ``FaultModel``) or finish past the deadline are excluded from the round;
+    the bandit learns a *censored* observation (the deadline as the known
+    lower bound on their unobserved time), the server waits out the full
+    T_max whenever anyone failed (FedCS round-deadline semantics — an
+    all-failed round is a no-op that still advances the clock by T_max),
+    and the result carries per-slot outcome flags
+    (``SweepResult.fault_counts``).  At None the layer compiles away and
+    the sweep reproduces the fault-free trajectories bitwise.  A scenario
+    with active faults requires a deadline (ValueError otherwise).
 
     Scaling knobs (see distributed/sharding.py and docs/architecture.md):
 
@@ -713,6 +788,13 @@ def sweep(scenario: Scenario | str = "paper-baseline",
     scenario = get_scenario(scenario) if isinstance(scenario, str) else scenario
     if shard not in ("grid", "clients"):
         raise ValueError(f"unknown shard mode {shard!r}")
+    if s_round > n_clients:
+        raise ValueError(f"s_round={s_round} exceeds n_clients={n_clients}: "
+                         f"cannot select more clients than exist")
+    # validates the (fault, deadline) pair up front: negative deadlines and
+    # fault injection without a deadline both raise here, not inside jit
+    deadline = None if deadline is None else float(deadline)
+    bandit_jax.resolve_fault(scenario.fault, deadline)
     pol_names, hypers = [], []
     for p in policies:
         name, hyper = p if isinstance(p, tuple) else (p, None)
@@ -744,15 +826,20 @@ def sweep(scenario: Scenario | str = "paper-baseline",
         env_arrays = dist_sharding.shard_leading(env_arrays, mesh)
 
     with suppress_unusable_donation_warnings():
-        rts = _run_grid(
+        out = _run_grid(
             env_arrays, jnp.float32(model_bits),
             jnp.asarray(hypers, jnp.float32), jnp.asarray(g_eta),
             jnp.asarray(g_seed),
             policies=tuple(pol_names), scen=scenario, n_rounds=n_rounds,
             s_round=s_round, n_req=math.ceil(n_clients * frac_request),
             fluctuate=fluctuate, chunk_rounds=chunk_rounds, mesh=mesh,
-            shard=shard, fused=fused, fast_sampling=fast_sampling)
+            shard=shard, fused=fused, fast_sampling=fast_sampling,
+            deadline=deadline)
+    rts, flags = out if deadline is not None else (out, None)
     rts = np.asarray(rts)[:, :n_grid].reshape(
         len(pol_names), len(etas), len(seeds), n_rounds)
+    if flags is not None:
+        flags = np.asarray(flags)[:, :n_grid].reshape(
+            len(pol_names), len(etas), len(seeds), n_rounds, s_round)
     return SweepResult(policies=tuple(pol_names), hypers=tuple(hypers),
-                       etas=etas, seeds=seeds, round_times=rts)
+                       etas=etas, seeds=seeds, round_times=rts, flags=flags)

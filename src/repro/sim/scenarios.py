@@ -20,6 +20,8 @@ Registry:
   diurnal-drift          — cell throughput follows a sinusoidal day cycle
   client-churn           — each round one client may be replaced by a fresh
                            device (new mean resources, server stats go stale)
+  flaky-clients          — failure injection (FaultModel): 10% crash before
+                           upload, 5% mid-upload churn, 2% corrupted updates
 
 This module is numpy-only (no jax import) so the reference simulator stays
 importable on minimal hosts.
@@ -41,6 +43,56 @@ STRAGGLER_CAP_LOW, STRAGGLER_CAP_HIGH = 1.0, 10.0
 
 
 @dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Per-round, per-client failure probabilities (the failure taxonomy of
+    the mobile-network participant-selection survey, 2207.03681).
+
+    Each dispatched client independently draws three Bernoulli outcomes per
+    round from the engines' per-round-keyed fault stream (a tagged
+    ``fold_in`` of the per-round policy key, so chunked==unchunked and
+    fused==unfused stay bitwise):
+
+      crash_prob    — crash before upload: the update never leaves the
+                      device; the server learns nothing but the timeout
+      churn_prob    — mid-upload churn (client leaves the cell): the upload
+                      starts but never completes
+      corrupt_prob  — the upload *completes in time* but the emitted update
+                      is garbage (non-finite / exploded); timing is a valid
+                      observation, the payload is rejected by the
+                      aggregation guard
+
+    All-zero (the default) is the exact happy path: the engines compile the
+    failure layer away entirely, so ``fault_prob=0`` reproduces the
+    fault-free trajectories bitwise.  Frozen + floats only, so a Scenario
+    carrying it stays hashable (both engines pass scenarios as static jit
+    arguments).  Fault injection requires a finite round ``deadline`` —
+    without one the server would wait forever for a crashed client — which
+    the engine entry points validate.
+    """
+
+    crash_prob: float = 0.0
+    churn_prob: float = 0.0
+    corrupt_prob: float = 0.0
+
+    def __post_init__(self):
+        if any(p < 0.0 or p > 1.0 for p in self.probs):
+            raise ValueError(f"fault probabilities must lie in [0, 1], "
+                             f"got {self.probs}")
+
+    @property
+    def active(self) -> bool:
+        return (self.crash_prob > 0.0 or self.churn_prob > 0.0
+                or self.corrupt_prob > 0.0)
+
+    @property
+    def probs(self) -> tuple[float, float, float]:
+        """The static (crash, churn, corrupt) triple the round kernels take
+        (plain floats — the kernel layer never imports this module)."""
+        return (float(self.crash_prob), float(self.churn_prob),
+                float(self.corrupt_prob))
+
+
+@dataclasses.dataclass(frozen=True)
 class Scenario:
     """Declarative environment description (all dynamics default to off)."""
 
@@ -52,6 +104,7 @@ class Scenario:
     diurnal_amp: float = 0.0         # throughput *= 1 + amp*sin(2pi r/period)
     diurnal_period: int = 0
     churn_prob: float = 0.0          # P[one client replaced] per round
+    fault: FaultModel = FaultModel()  # per-client failure injection
 
     # -- static environment -------------------------------------------------
     def build_env(self, n_clients: int, rng: np.random.Generator) -> NetworkEnv:
@@ -151,6 +204,11 @@ SCENARIOS: dict[str, Scenario] = {s.name: s for s in [
              congestion_sigma=0.5),
     Scenario("diurnal-drift", diurnal_amp=0.5, diurnal_period=200),
     Scenario("client-churn", churn_prob=0.2),
+    # the benched fault environment: 10% of dispatched clients crash before
+    # upload each round, a further 5% churn mid-upload and 2% return
+    # corrupted updates (run with a finite deadline, e.g. sweep(deadline=...))
+    Scenario("flaky-clients", fault=FaultModel(
+        crash_prob=0.10, churn_prob=0.05, corrupt_prob=0.02)),
 ]}
 
 
